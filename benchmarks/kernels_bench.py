@@ -1,0 +1,50 @@
+"""Kernel micro-bench: packed-weight paths vs float matmul on this CPU
+(numbers are CPU-relative; the TPU story is the roofline analysis)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import pack_matrix
+from repro.kernels.qmatmul.ref import qmatmul_ref
+from repro.kernels.qmatvec.ref import qmatvec_ref
+
+
+def _time(fn, *args, reps=10):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    m, k, n = 100, 1022, 1022
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(key, (k, n))
+    q = jax.random.randint(key, (k, n), -3, 4, jnp.int8)
+    wp = pack_matrix(q, 3)
+    d = jnp.ones((n,)) * 0.1
+
+    f_float = jax.jit(lambda x, w: x @ w)
+    f_q = jax.jit(lambda x, q, d: qmatmul_ref(x, q, d))
+    f_qp = jax.jit(lambda x, wp, d: qmatvec_ref(x, wp, d, k))
+    return [
+        ("kernel.cpu.matmul_f32", _time(f_float, x, w), f"shape={m}x{k}x{n}"),
+        ("kernel.cpu.qmatmul_ref", _time(f_q, x, q, d), "int8 levels + delta"),
+        ("kernel.cpu.qmatvec_ref", _time(f_qp, x, wp, d),
+         "3.2-bit containers unpacked in-graph"),
+    ]
+
+
+def main():
+    for name, us, derived in run():
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Paper Table 1/2 analogue: weight storage by precision + on-chip verdicts.
+
+The paper's question — "do the weights fit in on-chip memory?" — answered for
+(a) its own two nets vs the XC7Z045's 2.18MB BRAM, and (b) every assigned LM
+arch vs a v5e pod's aggregate VMEM/HBM per device on the 16x16 mesh.
+"""
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, get_config
+
+BRAM_BYTES = 2.18 * 2**20            # XC7Z045 (paper §2.1)
+VMEM_BYTES = 16 * 2**20              # v5e per-chip VMEM class
+HBM_BYTES = 16 * 2**30               # v5e per-chip HBM
+CHIPS = 256
+
+PAPER_NETS = {
+    "digit (784-1022^3-10)": 2_903_512 - 1022 * 3 - 10,     # weights only
+    "phoneme (429-1022^4-61)": 3_638_381 - 1022 * 4 - 61,
+}
+
+
+def bytes_for(n_weights: int, bits: float) -> int:
+    if bits == 3:                     # 10 x 3-bit per int32 word
+        return (n_weights + 9) // 10 * 4
+    return int(n_weights * bits / 8)
+
+
+def rows():
+    out = []
+    for name, n in PAPER_NETS.items():
+        out.append({
+            "net": name, "weights_M": n / 1e6,
+            "fp32_MB": bytes_for(n, 32) / 2**20,
+            "w8_MB": bytes_for(n, 8) / 2**20,
+            "w3_MB": bytes_for(n, 3) / 2**20,
+            "fits_bram_w8": bytes_for(n, 8) <= BRAM_BYTES,
+            "fits_bram_w3": bytes_for(n, 3) <= BRAM_BYTES,
+        })
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        w3_dev = bytes_for(n, 3) / CHIPS
+        out.append({
+            "net": arch, "weights_M": n / 1e6,
+            "fp32_MB": bytes_for(n, 32) / 2**20,
+            "w8_MB": bytes_for(n, 8) / 2**20,
+            "w3_MB": bytes_for(n, 3) / 2**20,
+            "w3_per_dev_MB": w3_dev / 2**20,
+            "fits_vmem_per_dev": w3_dev <= VMEM_BYTES,
+            "fits_hbm_per_dev": w3_dev <= HBM_BYTES,
+        })
+    return out
+
+
+def main():
+    rs = rows()
+    print(f"{'net':28s} {'Mw':>8s} {'fp32MB':>8s} {'w8MB':>8s} {'w3MB':>8s}  verdict")
+    for r in rs:
+        if "fits_bram_w3" in r:
+            v = (f"BRAM(2.18MB): w8={'FITS' if r['fits_bram_w8'] else 'NO'} "
+                 f"w3={'FITS' if r['fits_bram_w3'] else 'NO'}  <- paper Table 1")
+        else:
+            v = (f"w3/dev={r['w3_per_dev_MB']:.0f}MB on 256 chips: "
+                 f"VMEM={'FITS' if r['fits_vmem_per_dev'] else 'no'} "
+                 f"HBM={'FITS' if r['fits_hbm_per_dev'] else 'NO'}")
+        print(f"{r['net']:28s} {r['weights_M']:8.1f} {r['fp32_MB']:8.1f} "
+              f"{r['w8_MB']:8.1f} {r['w3_MB']:8.1f}  {v}")
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper-claims reproduction run (EXPERIMENTS.md §Repro):
+full-size digit + phoneme nets through the paper's full recipe
+(50 RBM epochs/layer + 100 float + 100 QAT epochs)."""
+import json
+import sys
+
+from repro.paper.pipeline import PaperRunConfig, run_paper_experiment
+
+
+def main(out_path="results/paper_repro.json", fast=False):
+    results = {}
+    for task in ("digit", "phoneme"):
+        rc = PaperRunConfig(task=task) if not fast else PaperRunConfig(
+            task=task, pretrain_epochs=3, float_epochs=3, retrain_epochs=2,
+            hidden=(128, 128))
+        results[task] = run_paper_experiment(rc, log=print)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=2)
+    print(json.dumps(results, indent=2))
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,141 @@
+"""Regenerate EXPERIMENTS.md tables from results/ (idempotent).
+
+Fills the <!-- REPRO_TABLE -->, <!-- ROOFLINE_TABLE -->,
+<!-- ROOFLINE_SUMMARY --> and <!-- PERF_LOG --> markers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks import roofline as rl
+
+EXP = "EXPERIMENTS.md"
+
+
+def repro_table() -> str:
+    path = "results/paper_repro.json"
+    if not os.path.exists(path):
+        return "_paper repro run pending_"
+    d = json.load(open(path))
+    out = ("| task | float MCR % | direct-quant % | W3A8 retrained % | gap pp "
+           "| paper gap pp | compression |\n|---|---|---|---|---|---|---|\n")
+    paper_gap = {"digit": 0.02, "phoneme": 0.58}
+    for task, m in d.items():
+        out += (f"| {task} | {m['float_mcr']:.2f} | {m['direct_quant_mcr']:.2f} "
+                f"| {m['w3a8_mcr']:.2f} | {m['gap_pp']:+.2f} | "
+                f"+{paper_gap[task]:.2f} | "
+                f"{m['weight_bytes_float'] / m['weight_bytes_packed']:.1f}x |\n")
+    return out
+
+
+_SENTENCES = {
+    ("decode", "memory"): ("W3 containers already cut weight traffic 5x vs bf16; "
+                           "next lever: fuse dequant into the matvec (Pallas qmatvec on "
+                           "real TPU) and shard the KV cache over every free mesh axis."),
+    ("decode", "collective"): ("replicate small kv projections to kill the score "
+                               "all-reduce; keep logits vocab-sharded."),
+    ("prefill", "memory"): ("larger attention chunks cut online-softmax "
+                            "rescale traffic; int8 activations halve stream bytes."),
+    ("prefill", "compute"): ("causal-chunk skipping halves masked-out QK^T work; "
+                             "MXU-aligned chunk sizes keep the matmuls dense."),
+    ("prefill", "collective"): ("all-gather of level weights amortizes over the whole "
+                                "32k sequence — move TP all-reduce to reduce-scatter+"
+                                "all-gather overlap."),
+    ("train", "memory"): ("remat policy recomputes the whole layer; switching to "
+                          "dots-saveable or larger microbatches cuts recompute bytes."),
+    ("train", "collective"): ("FSDP all-gathers dominate: bigger microbatches amortize "
+                              "them; int8 gradient compression shrinks cross-pod "
+                              "all-reduce 4x (distributed.compression)."),
+    ("train", "compute"): ("close to the flop roof: fold fake-quant into the matmul "
+                           "epilogue and drop fp32 upcasts in softmax/norms."),
+}
+
+
+def roofline_summary(rows) -> str:
+    out = ("| arch | shape | dominant | next lever (one sentence) |\n"
+           "|---|---|---|---|\n")
+    for r in rows:
+        if r["mesh"] != "single":
+            continue
+        kind = ("train" if "train" in r["shape"] else
+                "prefill" if "prefill" in r["shape"] else "decode")
+        s = _SENTENCES.get((kind, r["dominant"]), "")
+        out += f"| {r['arch']} | {r['shape']} | {r['dominant']} | {s} |\n"
+    return out
+
+
+def dryrun_table() -> str:
+    """Per-cell dry-run record: per-device memory, flops, collective mix."""
+    import glob
+
+    rows = []
+    for f in sorted(glob.glob("results/dryrun/*.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        full = r["full"]
+        mem = full["memory"]
+        coll = full["collectives"]
+        kinds = "+".join(
+            f"{k.split('-')[0]}{int(coll[k] / 2**20)}M" for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute") if coll.get(k, 0) > 0) or "none"
+        rows.append((r["arch"], r["shape"], r["mesh"],
+                     mem.get("peak_bytes_est", 0) / 2**30,
+                     full["cost"]["flops"] / 1e12,
+                     coll.get("count", 0), kinds, full["compile_s"]))
+    rows.sort()
+    out = ("| arch | shape | mesh | peak GB/dev | HLO TFLOP (body-once) | "
+           "#coll | collective mix (MB, body-once) | compile s |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    for a, s, m, gb, tf, nc, kinds, cs in rows:
+        out += (f"| {a} | {s} | {m} | {gb:.1f} | {tf:.2f} | {nc} | {kinds} "
+                f"| {cs} |\n")
+    return out
+
+
+def perf_log() -> str:
+    path = "results/perf_log.json"
+    if not os.path.exists(path):
+        return "_hillclimb pending_"
+    log = json.load(open(path))
+    out = ""
+    for cell, entries in log.items():
+        out += f"\n### {cell}\n\n"
+        out += ("| iter | change | hypothesis | dominant before (s) | after (s) "
+                "| Δ | verdict |\n|---|---|---|---|---|---|---|\n")
+        for i, e in enumerate(entries):
+            out += (f"| {i} | {e['change']} | {e['hypothesis']} | "
+                    f"{e['before']:.3e} | {e['after']:.3e} | "
+                    f"{(e['after'] - e['before']) / max(e['before'], 1e-12) * 100:+.1f}% "
+                    f"| {e['verdict']} |\n")
+        if entries and "summary" in entries[-1]:
+            out += f"\n{entries[-1]['summary']}\n"
+    return out
+
+
+def fill(marker: str, content: str, text: str) -> str:
+    pat = re.compile(rf"<!-- {marker} -->.*?(?=\n## |\n<!-- |\Z)", re.S)
+    repl = f"<!-- {marker} -->\n\n{content}\n"
+    if pat.search(text):
+        return pat.sub(repl.replace("\\", "\\\\"), text, count=1)
+    return text
+
+
+def main():
+    rows = rl.load_all()
+    json.dump(rows, open("results/roofline.json", "w"), indent=2)
+    text = open(EXP).read()
+    text = fill("REPRO_TABLE", repro_table(), text)
+    text = fill("DRYRUN_TABLE", dryrun_table(), text)
+    text = fill("ROOFLINE_TABLE", rl.markdown_table(rows), text)
+    text = fill("ROOFLINE_SUMMARY", roofline_summary(rows), text)
+    text = fill("PERF_LOG", perf_log(), text)
+    open(EXP, "w").write(text)
+    print("EXPERIMENTS.md regenerated")
+
+
+if __name__ == "__main__":
+    main()

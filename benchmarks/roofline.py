@@ -1,0 +1,237 @@
+"""Roofline assembly (deliverable g): three terms per (arch x shape) cell from
+the dry-run JSONs in results/dryrun/.
+
+Methodology notes (see EXPERIMENTS.md §Roofline):
+  * compiled.cost_analysis() on the partitioned module returns PER-DEVICE
+    flops/bytes (shapes in the SPMD program are per-partition), so terms are
+    per-chip directly — equivalent to HLO_total/(chips x peak) under load
+    balance.
+  * XLA counts while-loop bodies ONCE. Totals are reconstructed from the
+    L0/L1 (hybrid: L0/G1/A1) reduced-depth lowerings:
+        per_layer = C(L1) - C(L0);   total = C(L0) + L * per_layer
+    hybrid:  per_g(A) = C(G1)-C(L0); per_g(1) = C(A1)-C(L0)
+             m = (per_g(A)-per_g(1))/(A-1); a = per_g(1)-m
+             total = C(L0) + G*(A*m + a) + tail*m
+  * collective term assumes one ICI link per op (conservative serial model).
+
+Hardware constants (TPU v5e class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = {"single": 256, "multi": 512}
+
+RESULTS_DIR = "results/dryrun"
+
+
+def _costs(rec: Dict) -> Dict[str, float]:
+    c = rec["cost"]
+    return {"flops": c["flops"], "bytes": c["bytes"],
+            "coll": rec["collectives"].get("total", 0.0)}
+
+
+def _depth_combine(rec: Dict, suffix: str = "") -> Dict[str, float]:
+    """Undo body-once loop counting via the L0/L1 (hybrid L0/G1/A1) system."""
+    l = rec["num_layers"]
+    if rec.get("attn_every"):                          # hybrid decomposition
+        a = rec["attn_every"]
+        g, tail = l // a, l % a
+        l0 = _costs(rec["L0" + suffix])
+        pg_a = {k: _costs(rec["G1" + suffix])[k] - l0[k] for k in l0}
+        pg_1 = {k: _costs(rec["A1" + suffix])[k] - l0[k] for k in l0}
+        out = {}
+        for k in l0:
+            m = (pg_a[k] - pg_1[k]) / max(a - 1, 1)
+            att = pg_1[k] - m
+            out[k] = l0[k] + g * (a * m + att) + tail * m
+        return out
+    l0 = _costs(rec["L0" + suffix])
+    l1 = _costs(rec["L1" + suffix])
+    return {k: l0[k] + l * (l1[k] - l0[k]) for k in l0}
+
+
+def _quad_extrapolate(xs, ys, x: float) -> float:
+    """Exact Lagrange quadratic through 3 samples, evaluated at x."""
+    (x0, x1, x2), (y0, y1, y2) = xs, ys
+    return (y0 * (x - x1) * (x - x2) / ((x0 - x1) * (x0 - x2)) +
+            y1 * (x - x0) * (x - x2) / ((x1 - x0) * (x1 - x2)) +
+            y2 * (x - x0) * (x - x1) / ((x2 - x0) * (x2 - x1)))
+
+
+def _combine(rec: Dict) -> Optional[Dict[str, float]]:
+    """Reconstruct whole-model per-device costs from the aux lowerings."""
+    if "full" not in rec or rec.get("status") != "ok":
+        return None
+    try:
+        if rec.get("aux_scheme") == "seqfit":
+            # per-sample depth combine, then exact quadratic-in-S fit
+            # (every cost term is polynomial <=2 in sequence length)
+            xs = rec["seq_samples"]
+            totals = [_depth_combine(rec, f"@{s}") for s in xs]
+            return {k: max(_quad_extrapolate(xs, [t[k] for t in totals],
+                                             rec["seq_len"]), 0.0)
+                    for k in totals[0]}
+        return _depth_combine(rec)
+    except KeyError:
+        # aux lowering missing (multi-pod cells) — body-once numbers only
+        return None
+
+
+def _cfg_of(rec):
+    from repro.configs import get_config
+    return get_config(rec["arch"])
+
+
+def n_matmul_params(rec: Dict) -> float:
+    """Active params participating in matmuls: embedding-table gathers do no
+    flops, so subtract one vocab x d (the head matmul stays — tied or not)."""
+    cfg = _cfg_of(rec)
+    n = rec["active_params"]
+    if not cfg.tie_embeddings:
+        n -= cfg.vocab_size * cfg.d_model
+    return float(n)
+
+
+def model_flops_per_step(rec: Dict) -> float:
+    """Analytic MODEL_FLOPS (global): 6*N*D train / 2*N*D inference, N =
+    matmul-active params (embed gather excluded)."""
+    n = n_matmul_params(rec)
+    if rec["kind"] == "train":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * n * tokens
+    if rec["kind"] == "prefill":
+        tokens = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * n * tokens
+    tokens = rec["global_batch"]          # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def useful_bytes_per_chip(rec: Dict) -> float:
+    """Minimal per-chip HBM traffic for one step (the memory roofline's
+    denominator): weights read once (packed widths for w3) + decode KV/state
+    traffic. Activations/grads excluded (lower bound)."""
+    cfg = _cfg_of(rec)
+    chips = CHIPS[rec["mesh"]]
+    n_active = rec["active_params"]
+    embed = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    hidden = max(n_active - embed, 0)
+    if rec["kind"] == "train":
+        # fp32 master read + grad write + 2 Adam moments read/write ~ 16B/param
+        wbytes = rec["params"] * 16.0
+    elif rec["quant"] in ("w3", "w3levels"):
+        wbytes = hidden * 0.4 + embed * 1.0          # containers + int8
+    else:
+        wbytes = n_active * 2.0                      # bf16
+    cache = 0.0
+    if rec["kind"] == "decode":
+        s = min(rec["seq_len"], cfg.sliding_window or rec["seq_len"])
+        kv_bytes = 1 if rec.get("knobs", {}).get("kv8") else 2
+        if cfg.num_heads and cfg.family != "hybrid":
+            cache = (cfg.num_layers * rec["global_batch"] * s *
+                     cfg.num_kv_heads * cfg.head_dim * 2 * kv_bytes)
+        if cfg.family in ("ssm", "hybrid"):
+            cache += (cfg.num_layers * rec["global_batch"] * cfg.ssm_heads *
+                      cfg.ssm_headdim * cfg.ssm_state * 4 * 2)
+        if cfg.family == "hybrid":
+            napps = cfg.num_layers // cfg.attn_every
+            cache += (napps * rec["global_batch"] * rec["seq_len"] *
+                      cfg.num_kv_heads * cfg.head_dim * 2 * 2)
+    return wbytes / chips + cache / chips
+
+
+def analyze_cell(rec: Dict) -> Optional[Dict]:
+    comb = _combine(rec)
+    chips = CHIPS[rec["mesh"]]
+    mf = model_flops_per_step(rec) / chips      # per-chip useful flops
+    if comb is None:
+        comb = _costs(rec["full"]) if rec.get("status") == "ok" else None
+        exact = False
+        if comb is None:
+            return None
+    else:
+        exact = True
+    t_compute = comb["flops"] / PEAK_FLOPS
+    t_memory = comb["bytes"] / HBM_BW
+    t_coll = comb["coll"] / LINK_BW
+    bound = max(t_compute, t_memory, t_coll)
+    dominant = ("compute" if bound == t_compute else
+                "memory" if bound == t_memory else "collective")
+    ub = useful_bytes_per_chip(rec)
+    # roofline fraction: time the IDEAL machine needs (max of useful-flop and
+    # useful-byte roofs) over the achieved HLO-derived bound. MFU-style for
+    # compute-bound cells, BW-utilization-style for decode.
+    ideal = max(mf / PEAK_FLOPS, ub / HBM_BW)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "quant": rec.get("quant", "w3"), "exact_loops": exact,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": comb["flops"],
+        "useful_ratio": mf / comb["flops"] if comb["flops"] else 0.0,
+        "mfu_at_bound": (mf / PEAK_FLOPS) / bound if bound else 0.0,
+        "bwu_at_bound": (ub / HBM_BW) / bound if bound else 0.0,
+        "roofline_fraction": ideal / bound if bound else 0.0,
+        "step_bound_s": bound,
+        "memory_per_dev_gb": rec["full"]["memory"].get("peak_bytes_est", 0) / 2**30,
+    }
+
+
+def load_all(results_dir: str = RESULTS_DIR):
+    out = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            continue
+        # params in the JSON may predate config fixes — recompute analytically
+        cfg = _cfg_of(rec)
+        rec["params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+        a = analyze_cell(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def markdown_table(rows, mesh="single", quant="w3") -> str:
+    rows = [r for r in rows if r["mesh"] == mesh and r["quant"] == quant]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful(MODEL/HLO) | roofline frac | mem/dev GB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+                 f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+                 f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+                 f"{r['roofline_fraction']:.3f} | "
+                 f"{r['memory_per_dev_gb']:.1f} |\n")
+    return hdr + body
+
+
+def main():
+    rows = load_all()
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    print(markdown_table(rows))
+    # summary for benchmark CSV contract (single-pod = exact loop accounting;
+    # multi-pod rows are compile/memory proof only, not roofline terms)
+    for r in rows:
+        if not r["exact_loops"]:
+            continue
+        print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},"
+              f"{r['step_bound_s'] * 1e6:.1f},"
+              f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Table 1/2 (resource utilization)  -> memory_footprint
+  §4 throughput (70k img/s)         -> throughput
+  §4 DRAM bandwidth (630 Gbit/s)    -> bandwidth_math
+  §2.1 accuracy (MCR/PER)           -> accuracy
+  Table 3 (power)                   -> derived J/inference note in throughput
+  roofline/dry-run (this repo's)    -> roofline (reads results/dryrun)
+"""
+from __future__ import annotations
+
+import io
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (accuracy, bandwidth_math, kernels_bench,
+                            memory_footprint, throughput)
+
+    print("name,us_per_call,derived")
+    for mod in (memory_footprint,):
+        try:
+            rows = mod.rows()
+            for r in rows:
+                net = r["net"].replace(" ", "_").replace(",", ";")
+                print(f"memory.{net},0.00,w3_MB={r['w3_MB']:.2f};fp32_MB={r['fp32_MB']:.1f}")
+        except Exception:
+            traceback.print_exc()
+    for mod in (throughput, bandwidth_math, accuracy, kernels_bench):
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception:
+            traceback.print_exc()
+    # roofline table (only if dry-run results exist). Single-pod rows only:
+    # multi-pod cells carry no reduced-depth lowerings, so their loop costs
+    # are body-counted-once (compile/memory proof, not roofline terms).
+    try:
+        from benchmarks import roofline
+        rows = roofline.load_all()
+        for r in rows:
+            if not r["exact_loops"]:
+                continue
+            print(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']},"
+                  f"{r['step_bound_s'] * 1e6:.1f},"
+                  f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+                  f"useful={r['useful_ratio']:.2f}")
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import (W3A8, QuantSpec, fake_quant, optimal_uniform_delta,
+                        pack_matrix, quantize, unpack_matrix)
+from repro.kernels.qmatmul.ops import qmatmul
+from repro.kernels.qmatvec.ops import qmatvec
+
+key = jax.random.PRNGKey(0)
+
+# 1. a weight matrix, like one layer of the paper's 784-1022-1022-1022-10 net
+w = jax.random.normal(key, (784, 1022)) * 0.1
+
+# 2. optimal uniform 3-bit quantization (paper step 2): levels in {-3..3}
+spec = QuantSpec(bits=3)
+q, delta = quantize(w, spec)
+print(f"delta={float(delta):.4f}  levels {int(q.min())}..{int(q.max())}")
+print(f"quant MSE: {float(jnp.mean((w - q * delta) ** 2)):.2e}")
+
+# 3. STE fake-quant view — what the retraining forward pass sees (step 3)
+wq = fake_quant(w, spec)
+print(f"fake-quant unique levels: {len(jnp.unique(wq))} (<= 7)")
+
+# 4. pack into the on-chip container format: 10 weights per int32 word
+words = pack_matrix(q, 3)
+print(f"packed: {w.size * 4 / 2**20:.2f} MB fp32 -> {words.nbytes / 2**20:.3f} MB "
+      f"({w.size * 4 / words.nbytes:.1f}x smaller, paper's BRAM image)")
+
+# 5. compute through the Pallas kernels (interpret mode on CPU)
+x = jax.random.normal(key, (100, 784))                  # paper's batch of 100
+y_kernel = qmatmul(x, q, jnp.broadcast_to(delta, (1022,)))
+y_packed = qmatvec(x, words, jnp.broadcast_to(delta, (1022,)), k=784)
+y_ref = x @ (q * delta)
+print(f"qmatmul  vs ref: {float(jnp.max(jnp.abs(y_kernel - y_ref))):.2e}")
+print(f"qmatvec  vs ref: {float(jnp.max(jnp.abs(y_packed - y_ref))):.2e}")

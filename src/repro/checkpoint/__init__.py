@@ -1,0 +1,125 @@
+"""Checkpointing: flat-.npz tree snapshots with step management, keep-k GC,
+async (background-thread) saves, and **elastic restore** — params saved from
+one mesh can be restored onto a different mesh shape (arrays are saved
+unsharded; restore re-shards via device_put with the new sharding tree),
+which is the checkpoint/restart story for node failures and elastic scaling.
+
+Format: <dir>/step_<N>/arrays.npz + meta.json. Writes go to a tmp dir and are
+atomically renamed, so a killed job never leaves a half-written checkpoint
+(restore scans only *complete* step dirs).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.treeutil import flatten_with_path, unflatten
+
+__all__ = ["save", "restore", "latest_step", "all_steps", "Checkpointer"]
+
+
+def _np_tree(tree) -> Dict[str, np.ndarray]:
+    return {k: np.asarray(v) for k, v in flatten_with_path(tree).items()}
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, meta: Optional[Dict] = None,
+         keep: int = 3) -> str:
+    """Synchronous atomic save. Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:012d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _np_tree(jax.tree_util.tree_map(
+        lambda x: jax.device_get(x) if hasattr(x, "device") else x, tree))
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:012d}"), ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+            out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None, *,
+            shardings: Any = None) -> tuple:
+    """Load (tree, meta). ``shardings``: optional tree of NamedSharding to
+    re-shard onto a (possibly different) mesh — the elastic-restart path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:012d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        tree = unflatten({k: z[k] for k in z.files})
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if shardings is not None:
+        flat_s = flatten_with_path(shardings)
+        flat_t = flatten_with_path(tree)
+        tree = unflatten({
+            k: jax.device_put(v, flat_s[k]) if k in flat_s else v
+            for k, v in flat_t.items()})
+    return tree, meta
+
+
+class Checkpointer:
+    """Async checkpointer: save() returns immediately; a background thread
+    serializes (one in flight at a time — back-pressure on the next save)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: Any, meta: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot now
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, meta=meta, keep=self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

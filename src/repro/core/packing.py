@@ -1,0 +1,97 @@
+"""Sub-byte weight packing (the paper's on-chip storage format, §2.2/§5 of DESIGN).
+
+Two formats:
+
+1. ``pack_int32`` / ``unpack_int32`` — container format. ``fields`` b-bit
+   two's-complement fields per int32 word (10 fields for b=3: 30 bits used,
+   matching the paper's 3-bit BRAM words; 16 for b=2; 8 for b=4; 4 for b=8).
+   This is the checkpoint/serving storage format and the HBM streaming format
+   of the decode ``qmatvec`` kernel — 3.2 bits of HBM traffic per 3-bit weight.
+
+2. int8 "plane" format — the level value stored directly in int8. Used by the
+   compute-bound ``qmatmul`` kernel where MXU operand alignment matters more
+   than the last 2.5x of weight bandwidth (see DESIGN §5).
+
+All functions are pure jnp and jit-safe; shapes are static.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "fields_per_word",
+    "packed_words",
+    "pack_int32",
+    "unpack_int32",
+    "pack_matrix",
+    "unpack_matrix",
+    "packed_nbytes",
+]
+
+
+def fields_per_word(bits: int) -> int:
+    """How many b-bit fields fit one int32 word (30 bits used for b=3)."""
+    if bits not in (2, 3, 4, 8):
+        raise ValueError(f"unsupported pack width: {bits}")
+    return {2: 16, 3: 10, 4: 8, 8: 4}[bits]
+
+
+def packed_words(n: int, bits: int) -> int:
+    f = fields_per_word(bits)
+    return (n + f - 1) // f
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def pack_int32(q: jnp.ndarray, bits: int = 3) -> jnp.ndarray:
+    """Pack a flat int array of b-bit signed levels into int32 words.
+
+    Values must lie in [-(2^(b-1)), 2^(b-1)-1]; the quantizer only emits
+    [-(2^(b-1)-1), 2^(b-1)-1] so this always holds.
+    """
+    f = fields_per_word(bits)
+    mask = (1 << bits) - 1
+    n = q.shape[0]
+    nw = packed_words(n, bits)
+    qp = jnp.zeros((nw * f,), jnp.int32).at[:n].set(q.astype(jnp.int32))
+    qp = qp.reshape(nw, f) & mask  # two's complement truncation to b bits
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    return jnp.sum(qp << shifts[None, :], axis=1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("bits", "n"))
+def unpack_int32(words: jnp.ndarray, n: int, bits: int = 3) -> jnp.ndarray:
+    """Inverse of :func:`pack_int32`; returns int8 levels of length ``n``."""
+    f = fields_per_word(bits)
+    mask = (1 << bits) - 1
+    sign = 1 << (bits - 1)
+    shifts = jnp.arange(f, dtype=jnp.int32) * bits
+    fieldsv = (words[:, None] >> shifts[None, :]) & mask
+    fieldsv = fieldsv - ((fieldsv & sign) << 1)  # sign extend
+    return fieldsv.reshape(-1)[:n].astype(jnp.int8)
+
+
+def pack_matrix(q: jnp.ndarray, bits: int = 3) -> jnp.ndarray:
+    """Pack a (K, N) int level matrix along K into (ceil(K/f), N) int32.
+
+    Packing along K (the reduction axis) keeps each output column's weights
+    contiguous per word, which is what the decode matvec kernel streams.
+    """
+    k, n = q.shape
+    f = fields_per_word(bits)
+    return jax.vmap(lambda col: pack_int32(col, bits), in_axes=1, out_axes=1)(q)
+
+
+def unpack_matrix(words: jnp.ndarray, k: int, bits: int = 3) -> jnp.ndarray:
+    """Inverse of :func:`pack_matrix` -> (K, N) int8."""
+    return jax.vmap(lambda col: unpack_int32(col, k, bits), in_axes=1, out_axes=1)(words)
+
+
+def packed_nbytes(shape, bits: int) -> int:
+    """HBM bytes for a packed tensor of logical ``shape``."""
+    import math
+
+    n = math.prod(shape)
+    return packed_words(n, bits) * 4

@@ -1,0 +1,68 @@
+"""Per-layer quantization policy (paper §2.1: hidden 3-bit, output 8-bit).
+
+A :class:`QuantPolicy` decides, for every weight leaf by *role*, which
+:class:`~repro.core.quantizer.QuantSpec` applies (or none). Roles are assigned
+by the model code when it calls ``policy.spec_for(role)``:
+
+  role            paper analogue                      default bits
+  ------------    --------------------------------    ------------
+  hidden          hidden-layer weight matrices        3
+  output          output/classifier layer (W8)        8
+  embed           embedding tables                    8
+  router          MoE router (small & sensitive)      8
+  ssm             SSM dynamics (A, dt, conv)          None (fp32)
+  norm/bias       norms & biases                      None (fp32)
+
+``mode`` selects the forward-path realization:
+  'float'  — no quantization (paper step 1 / GPU baseline)
+  'fake'   — STE fake-quant (paper step 3, QAT)
+  'packed' — inference with integer levels + delta (paper's deployed form)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.quantizer import QuantSpec
+
+__all__ = ["QuantPolicy", "FLOAT", "W3A8", "W4A8", "W8", "TERNARY"]
+
+_NOQUANT_ROLES = ("norm", "bias", "ssm", "scale")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Maps weight roles to quant specs; controls forward-path mode."""
+
+    mode: str = "float"                 # 'float' | 'fake' | 'packed'
+    bits: Dict[str, Optional[int]] = dataclasses.field(
+        default_factory=lambda: {"hidden": 3, "output": 8, "embed": 8, "router": 8}
+    )
+    act_bits: Optional[int] = None      # None = full precision activations
+    per_channel: Optional[int] = None   # None = per-tensor (paper); else axis
+
+    def spec_for(self, role: str) -> Optional[QuantSpec]:
+        if self.mode == "float":
+            return None
+        if role in _NOQUANT_ROLES:
+            return None
+        b = self.bits.get(role, self.bits.get("hidden"))
+        if not b:
+            return None
+        return QuantSpec(bits=b, per_channel=self.per_channel)
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode != "float"
+
+    def with_mode(self, mode: str) -> "QuantPolicy":
+        return dataclasses.replace(self, mode=mode)
+
+
+FLOAT = QuantPolicy(mode="float")
+# The paper's deployed configuration: 3-bit hidden, 8-bit output, 8-bit signals.
+W3A8 = QuantPolicy(mode="fake", bits={"hidden": 3, "output": 8, "embed": 8, "router": 8}, act_bits=8)
+W4A8 = QuantPolicy(mode="fake", bits={"hidden": 4, "output": 8, "embed": 8, "router": 8}, act_bits=8)
+W8 = QuantPolicy(mode="fake", bits={"hidden": 8, "output": 8, "embed": 8, "router": 8})
+# Hwang & Sung 2014 ternary (+1, 0, -1) — the paper's reference [14].
+TERNARY = QuantPolicy(mode="fake", bits={"hidden": 2, "output": 8, "embed": 8, "router": 8}, act_bits=8)

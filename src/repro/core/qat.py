@@ -1,0 +1,99 @@
+"""Quantization-aware retraining (the paper's §2.1, step 3).
+
+The paper retrains with fixed-point weights in the forward path while the
+backward pass updates a float master copy — the straight-through estimator
+(STE). ``fake_quant`` realizes exactly that:
+
+    forward:   w_q = delta * clip(round(w / delta), -M, M)
+    backward:  dL/dw = dL/dw_q          (identity through the rounding)
+
+Two delta modes:
+  * ``delta=None``  — re-fit the L2-optimal delta *inside* the forward pass
+    each step (delta is stop-gradiented; this follows retraining practice of
+    Hwang & Sung 2014 where the step size tracks the drifting weights).
+  * fixed ``delta`` — frozen from the post-float-training quantization step.
+
+Activations: the paper uses 8-bit signals between layers. ``fake_quant_act``
+quantizes activations with a dynamic per-tensor absmax scale and STE.
+
+``three_step_pipeline`` drives the full paper recipe:
+  1. float training          (caller's train_fn)
+  2. optimal uniform quant   (quantizer.quantize on every policy-selected leaf)
+  3. retraining with STE     (caller's train_fn with quantized forward enabled)
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizer as qz
+
+__all__ = ["fake_quant", "fake_quant_act", "ste_round", "ThreeStepResult", "three_step_pipeline"]
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round(x) with identity gradient."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def fake_quant(w: jnp.ndarray, spec: qz.QuantSpec,
+               delta: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """STE fake-quantized view of ``w`` (same dtype/shape as ``w``)."""
+    if delta is None:
+        delta = jax.lax.stop_gradient(qz.optimal_uniform_delta(w, spec))
+    d = qz._broadcast_delta(delta, w.shape, spec.per_channel)
+    d = jnp.maximum(d, 1e-12)
+    m = float(spec.levels)
+    q = jnp.clip(ste_round(w.astype(jnp.float32) / d), -m, m)
+    return (q * d).astype(w.dtype)
+
+
+def fake_quant_act(x: jnp.ndarray, bits: int = 8, signed: bool = True) -> jnp.ndarray:
+    """8-bit (default) activation fake-quant, dynamic per-tensor absmax scale.
+
+    For unsigned activations (post-sigmoid, in [0, 1]) use ``signed=False``:
+    levels 0..2^b-1, matching the paper's 8-bit inter-tile signals.
+    """
+    xf = x.astype(jnp.float32)
+    if signed:
+        m = float(2 ** (bits - 1) - 1)
+        scale = jax.lax.stop_gradient(jnp.max(jnp.abs(xf)))
+        scale = jnp.maximum(scale / m, 1e-12)
+        q = jnp.clip(ste_round(xf / scale), -m, m)
+    else:
+        m = float(2 ** bits - 1)
+        scale = jax.lax.stop_gradient(jnp.max(xf))
+        scale = jnp.maximum(scale / m, 1e-12)
+        q = jnp.clip(ste_round(xf / scale), 0.0, m)
+    return (q * scale).astype(x.dtype)
+
+
+class ThreeStepResult(NamedTuple):
+    float_params: dict
+    quant_params: dict          # float master copy after retraining
+    deltas: dict                # per-leaf deltas frozen after step 2
+    float_metrics: dict
+    retrain_metrics: dict
+
+
+def three_step_pipeline(
+    init_params: dict,
+    float_train_fn: Callable[[dict], tuple],
+    quantize_tree_fn: Callable[[dict], dict],
+    retrain_fn: Callable[[dict, dict], tuple],
+) -> ThreeStepResult:
+    """Drive the paper's float-train -> quantize -> retrain recipe.
+
+    The three callables own model/optimizer specifics; this driver pins the
+    *order* and hands artifacts between the steps:
+
+      float_train_fn(params)            -> (params, metrics)
+      quantize_tree_fn(params)          -> deltas pytree (step-2 L2-optimal fit)
+      retrain_fn(params, deltas)        -> (params, metrics)   # STE forward
+    """
+    fparams, fmetrics = float_train_fn(init_params)
+    deltas = quantize_tree_fn(fparams)
+    qparams, qmetrics = retrain_fn(fparams, deltas)
+    return ThreeStepResult(fparams, qparams, deltas, fmetrics, qmetrics)

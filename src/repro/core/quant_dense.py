@@ -1,0 +1,242 @@
+"""Quantizable dense layer — the building block every model in the zoo uses.
+
+A weight leaf takes one of three forms (all flow through the same model code):
+
+  {"w": f32}                   master float weights
+                               -> policy 'float': used as-is (GPU baseline)
+                               -> policy 'fake':  STE fake-quant (paper step 3)
+  {"q": int8, "delta"}         serve form A: quantized *levels* at full shape
+                               (the Pallas qmatmul streaming format — 1 B/wt)
+  {"qp": int32, "delta"}       serve form B: 3-bit container words packed
+                               along K (10 wt/word — the paper's BRAM image,
+                               0.4 B/wt HBM traffic; Pallas qmatvec format)
+
+``export_levels`` / ``export_container`` convert a trained tree to the serve
+forms (per-output-channel deltas; stacked layer dims handled). Biases stay
+full precision per the paper.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat
+from repro.core import quantizer as qz
+from repro.core.precision import QuantPolicy
+from repro.core.treeutil import flatten_with_path, map_with_path, role_of, unflatten
+
+__all__ = ["init", "apply", "effective_weight", "fit_deltas", "fit_deltas_stacked",
+           "export_levels", "export_container", "export_packed", "packed_apply"]
+
+
+def init(key, in_dim: int, out_dim: int, *, bias: bool = True,
+         dtype=jnp.float32, scale: Optional[float] = None) -> Dict[str, Any]:
+    """He/Glorot-style init. Param names: 'w' (in,out), optional 'b' (out,)."""
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(in_dim)
+    w = jax.random.uniform(key, (in_dim, out_dim), dtype, -1.0, 1.0) * scale
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+# dequantization compute dtype for the serve forms. float32 materializes a
+# 4 B/weight intermediate in-graph; bfloat16 halves that traffic (beyond-paper
+# optimization, §Perf H-dequant) — the Pallas kernels avoid it entirely on
+# real TPUs by dequantizing in VMEM.
+DEQUANT_DTYPE = jnp.float32
+
+
+def effective_weight(params, policy: QuantPolicy, role: str,
+                     delta: Optional[jnp.ndarray] = None,
+                     k: Optional[int] = None) -> jnp.ndarray:
+    """The weight the forward pass sees. ``params``: leaf dict or raw array.
+
+    ``k``: logical reduction dim (required for the "qp" container form —
+    callers know it from the activation shape)."""
+    if not isinstance(params, dict):
+        params = {"w": params}
+    dq = DEQUANT_DTYPE
+    if "qp" in params:
+        from repro.core import packing
+        assert k is not None, "container form needs the logical K"
+        q = packing.unpack_matrix(params["qp"], k, 3)
+        return q.astype(dq) * params["delta"].astype(dq)
+    if "q" in params:
+        return params["q"].astype(dq) * params["delta"].astype(dq)
+    w = params["w"]
+    spec = policy.spec_for(role)
+    if spec is None:
+        return w
+    return qat.fake_quant(w, spec, delta)
+
+
+def apply(params: Dict[str, Any], x: jnp.ndarray, *, policy: QuantPolicy,
+          role: str = "hidden", delta: Optional[jnp.ndarray] = None,
+          quantize_input: bool = False) -> jnp.ndarray:
+    """Dense forward under any weight form."""
+    if quantize_input and policy.act_bits:
+        x = qat.fake_quant_act(x, policy.act_bits)
+    w = effective_weight(params, policy, role, delta, k=x.shape[-1])
+    y = x @ w.astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+# --- whole-tree operations ----------------------------------------------------
+
+def _is_weight(path: str) -> bool:
+    return path.endswith("/w") or path == "w"
+
+
+def _stacked_dims(path: str) -> int:
+    """Leading layer-stack dims for scanned params (layers/ =1, groups/ =2)."""
+    if path.startswith("groups/") or "/groups/" in path:
+        return 2
+    if any(path.startswith(p) or f"/{p}/" in path
+           for p in ("layers", "tail")):
+        return 1
+    return 0
+
+
+def _leaf_spec(path: str, policy: QuantPolicy) -> Optional[qz.QuantSpec]:
+    if not _is_weight(path):
+        return None
+    return policy.spec_for(role_of(path))
+
+
+def fit_deltas(params: Any, policy: QuantPolicy) -> Any:
+    """Step 2 of the paper (per-tensor, unstacked trees — the MLP repro)."""
+    def fit(path, leaf):
+        spec = _leaf_spec(path, policy)
+        if spec is None:
+            return None
+        return qz.optimal_uniform_delta(leaf, spec)
+
+    return map_with_path(fit, params)
+
+
+def fit_deltas_stacked(params: Any, policy: QuantPolicy) -> Any:
+    """Per-layer per-tensor deltas for scan-stacked LM trees: a leaf
+    (L, ..., N) gets delta (L,) (or (G, A) for hybrid groups) — one step size
+    per layer per tensor, the paper's rule applied layerwise."""
+    def fit(path, leaf):
+        spec = _leaf_spec(path, policy)
+        if spec is None:
+            return None
+        nd = _stacked_dims(path)
+        if nd == 0:
+            return qz.optimal_uniform_delta(leaf, spec)
+        flat = leaf.reshape((-1,) + leaf.shape[nd:])
+        ds = jax.vmap(lambda w: qz.optimal_uniform_delta(w, spec))(flat)
+        return ds.reshape(leaf.shape[:nd])
+
+    return map_with_path(fit, params)
+
+
+def _quantize_leaf(leaf: jnp.ndarray, spec: qz.QuantSpec, nd: int):
+    """Per-output-channel (last dim) levels+delta, vmapped over stacked dims.
+    Returns (q int8 same shape, delta broadcastable against q)."""
+    cspec = qz.QuantSpec(bits=spec.bits, per_channel=-1, iters=spec.iters)
+    if nd == 0:
+        d = qz.optimal_uniform_delta(leaf, cspec)
+        q = qz.quantize_levels(leaf, d, cspec)
+        shape = [1] * (leaf.ndim - 1) + [leaf.shape[-1]]
+        return q, d.reshape(shape)
+    flat = leaf.reshape((-1,) + leaf.shape[nd:])
+    d = jax.vmap(lambda w: qz.optimal_uniform_delta(w, cspec))(flat)
+    q = jax.vmap(lambda w, dd: qz.quantize_levels(w, dd, cspec))(flat, d)
+    bshape = leaf.shape[:nd] + (1,) * (leaf.ndim - nd - 1) + (leaf.shape[-1],)
+    return q.reshape(leaf.shape), d.reshape(bshape)
+
+
+def export_levels(params: Any, policy: QuantPolicy) -> Any:
+    """Serve form A: every quantizable weight -> {"q": int8, "delta"}."""
+    flat = flatten_with_path(params)
+    out: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        spec = _leaf_spec(path, policy)
+        if spec is None:
+            out[path] = leaf
+            continue
+        q, d = _quantize_leaf(leaf, spec, _stacked_dims(path))
+        out[path.rsplit("/", 1)[0] + "/q" if "/" in path else "q"] = q
+        out[path.rsplit("/", 1)[0] + "/delta" if "/" in path else "delta"] = d
+    return unflatten(out)
+
+
+def export_container(params: Any, policy: QuantPolicy) -> Any:
+    """Serve form B: 3-bit roles -> {"qp": int32 containers packed along K,
+    "delta"}; other quantized roles (8-bit output/embed) stay form A."""
+    from repro.core import packing
+
+    flat = flatten_with_path(params)
+    out: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        spec = _leaf_spec(path, policy)
+        if spec is None:
+            out[path] = leaf
+            continue
+        nd = _stacked_dims(path)
+        q, d = _quantize_leaf(leaf, spec, nd)
+        base = path.rsplit("/", 1)[0] + "/" if "/" in path else ""
+        # container form only for logically-2D weights (K, N); 3D expert
+        # tensors keep the level form (their einsum needs the full shape)
+        if spec.bits == 3 and leaf.ndim - nd == 2:
+            import math
+            k = math.prod(leaf.shape[nd:-1])
+            q2 = q.reshape(leaf.shape[:nd] + (k, leaf.shape[-1]))
+            pack = lambda m: packing.pack_matrix(m, 3)
+            for _ in range(nd):
+                pack = jax.vmap(pack)
+            out[base + "qp"] = pack(q2)
+            out[base + "delta"] = d.reshape(
+                leaf.shape[:nd] + (1, leaf.shape[-1]))
+        else:
+            out[base + "q"] = q
+            out[base + "delta"] = d
+    return unflatten(out)
+
+
+def export_packed(params: Any, policy: QuantPolicy) -> Any:
+    """Legacy MLP-repro container export (per-tensor delta + shape record)."""
+    from repro.core import packing
+
+    flat = flatten_with_path(params)
+    out: Dict[str, Any] = {}
+    for path, leaf in flat.items():
+        spec = _leaf_spec(path, policy)
+        if spec is None:
+            out[path] = leaf
+            continue
+        q, delta = qz.quantize(leaf, spec)
+        q2d = q.reshape(-1, q.shape[-1]) if q.ndim >= 2 else q.reshape(-1, 1)
+        out[path] = {
+            "q": packing.pack_matrix(q2d, spec.bits),
+            "delta": jnp.asarray(delta, jnp.float32),
+            "bits": jnp.asarray(spec.bits, jnp.int32),
+            "shape": jnp.asarray(leaf.shape, jnp.int32),
+        }
+    return unflatten(out)
+
+
+def packed_apply(packed: Dict[str, Any], x: jnp.ndarray, *,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    """Inference matmul against a legacy packed leaf from export_packed."""
+    from repro.core import packing
+
+    shape = tuple(int(s) for s in packed["shape"])
+    bits = int(packed["bits"])
+    k = 1
+    for s in shape[:-1]:
+        k *= s
+    if use_kernel and x.ndim == 2 and bits == 3:
+        from repro.kernels.qmatvec import ops as qmv_ops
+        return qmv_ops.qmatvec(x, packed["q"], packed["delta"], k=k)
+    q = packing.unpack_matrix(packed["q"], k, bits).reshape(shape)
+    w = q.astype(jnp.float32) * packed["delta"]
+    return x @ w.astype(x.dtype)

@@ -1,0 +1,74 @@
+"""Input pipeline: double-buffered device prefetch — the TPU analogue of the
+paper's BRAM0/BRAM1 ping-pong (§3): while the accelerator consumes batch i,
+batch i+1 is generated and transferred. Plus sharded global-batch placement
+for multi-host meshes.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+
+__all__ = ["prefetch", "shard_batch", "HostLoader"]
+
+
+def prefetch(it: Iterator[Any], size: int = 2) -> Iterator[Any]:
+    """Background-thread prefetch queue of depth ``size`` (2 = ping-pong)."""
+    q: "queue.Queue" = queue.Queue(maxsize=size)
+    sentinel = object()
+    err: list = []
+
+    def worker():
+        try:
+            for x in it:
+                q.put(x)
+        except Exception as e:        # propagate into the consumer
+            err.append(e)
+        finally:
+            q.put(sentinel)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    while True:
+        x = q.get()
+        if x is sentinel:
+            if err:
+                raise err[0]
+            return
+        yield x
+
+
+def shard_batch(batch, sharding) -> Any:
+    """Place a host batch onto the mesh with the given NamedSharding tree."""
+    if sharding is None:
+        return batch
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), batch, sharding)
+
+
+class HostLoader:
+    """Deterministic step-indexed loader: batch = fn(seed, step).
+
+    Restart/elasticity: nothing to checkpoint except the step counter — any
+    host can regenerate any shard (see data.synthetic docstring).
+    """
+
+    def __init__(self, batch_fn: Callable[[int, int], Any], *, seed: int = 0,
+                 start_step: int = 0, sharding=None, prefetch_depth: int = 2):
+        self.batch_fn = batch_fn
+        self.seed = seed
+        self.step = start_step
+        self.sharding = sharding
+        self.prefetch_depth = prefetch_depth
+
+    def __iter__(self):
+        def gen():
+            step = self.step
+            while True:
+                b = self.batch_fn(self.seed, step)
+                yield shard_batch(b, self.sharding)
+                step += 1
+
+        return prefetch(gen(), self.prefetch_depth)

@@ -1,0 +1,3 @@
+from repro.distributed.context import constrain, sharding_rules
+
+__all__ = ["constrain", "sharding_rules"]

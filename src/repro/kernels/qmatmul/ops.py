@@ -1,0 +1,53 @@
+"""Jit'd public wrapper for the packed-W3 matmul kernel.
+
+Handles leading batch dims, interpret-mode fallback on CPU (the container
+runtime), and block-size selection. ``qdense``: full quantized dense layer
+(kernel matmul + bias).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmatmul.kernel import qmatmul_pallas
+from repro.kernels.qmatmul.ref import qmatmul_ref
+
+__all__ = ["qmatmul", "qdense", "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_blocks(m: int, n: int, k: int):
+    """MXU-aligned blocks sized for ~1.5MB VMEM working set."""
+    bm = 256 if m >= 256 else max(8, m)
+    bn = 512 if n >= 512 else max(128, min(n, 512))
+    bk = 512 if k >= 512 else max(128, min(k, 512))
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
+            interpret: bool | None = None) -> jnp.ndarray:
+    """(..., K) x (K, N) int8 levels -> (..., N); delta (N,) or scalar."""
+    if interpret is None:
+        interpret = not on_tpu()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    n = w_q.shape[-1]
+    x2 = x.reshape(-1, k)
+    bm, bn, bk = pick_blocks(x2.shape[0], n, k)
+    out = qmatmul_pallas(x2, w_q, delta, bm=bm, bn=bn, bk=bk,
+                         interpret=interpret)
+    return out.reshape(*lead, n)
+
+
+def qdense(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
+           bias: jnp.ndarray | None = None, interpret: bool | None = None):
+    y = qmatmul(x, w_q, delta, interpret=interpret)
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: decode-time matvec streaming 3.2-bit packed weights.
+
+THE paper's regime on TPU (DESIGN §3): decode GEMMs have arithmetic intensity
+~1 FLOP/byte, entirely HBM-bandwidth-bound. This kernel streams the weight
+matrix in the *container* format — 10 3-bit fields per int32 word, exactly the
+paper's BRAM image — so HBM traffic is 3.2 bits/weight instead of 16 (bf16):
+a 5x cut of the dominant roofline term. The unpack (shift/mask/sign-extend on
+the VPU) is free: the kernel is still bandwidth-bound after a 5x traffic cut.
+
+Layout: words (KP, N) int32 where word j of column n holds weights
+k = 10j..10j+9 (packed along K, see core.packing.pack_matrix). The kernel
+unpacks a (bkp, bn) word tile to a (10*bkp, bn) level tile in VMEM, converts
+to the activation dtype, and MXU-accumulates against the (B, 10*bkp)
+activation slice. fp32 accumulator in VMEM scratch across the KP grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["qmatvec_pallas", "FIELDS"]
+
+FIELDS = 10  # 3-bit fields per int32 container word
+_BITS = 3
+_MASK = (1 << _BITS) - 1
+_SIGN = 1 << (_BITS - 1)
+
+
+def _unpack_tile(words: jnp.ndarray) -> jnp.ndarray:
+    """(bkp, bn) int32 -> (bkp*10, bn) int32 signed levels."""
+    bkp, bn = words.shape
+    fields = []
+    for i in range(FIELDS):
+        f = (words >> (i * _BITS)) & _MASK
+        fields.append(f - ((f & _SIGN) << 1))      # sign-extend 3-bit
+    lv = jnp.stack(fields, axis=1)                 # (bkp, 10, bn)
+    return lv.reshape(bkp * FIELDS, bn)
+
+
+def _kernel(x_ref, w_ref, d_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    lv = _unpack_tile(w_ref[...]).astype(x.dtype)
+    acc_ref[...] += jnp.dot(x, lv, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = (acc_ref[...] * d_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bkp", "interpret",
+                                             "out_dtype"))
+def qmatvec_pallas(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray,
+                   *, bn: int = 256, bkp: int = 128, out_dtype=None,
+                   interpret: bool = False) -> jnp.ndarray:
+    """x (B, K), w_packed (KP, N) int32, delta (N,) -> (B, N).
+
+    K must satisfy KP = ceil(K/10); x is zero-padded to 10*KP internally.
+    """
+    b, k = x.shape
+    kp, n = w_packed.shape
+    assert kp * FIELDS >= k, (x.shape, w_packed.shape)
+    out_dtype = out_dtype or x.dtype
+    delta = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
+
+    bn = min(bn, n)
+    bkp = min(bkp, kp)
+    npad = -(-n // bn) * bn
+    kppad = -(-kp // bkp) * bkp
+    if npad != n:
+        w_packed = jnp.pad(w_packed, ((0, 0), (0, npad - n)))
+        delta = jnp.pad(delta, (0, npad - n))
+    if kppad != kp:
+        w_packed = jnp.pad(w_packed, ((0, kppad - kp), (0, 0)))
+    xk = kppad * FIELDS
+    x = jnp.pad(x, ((0, 0), (0, xk - k)))
+
+    grid = (npad // bn, kppad // bkp)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bkp * FIELDS), lambda j, kk: (0, kk)),
+            pl.BlockSpec((bkp, bn), lambda j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, npad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((b, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_packed, delta)
+    return out[:, :n]

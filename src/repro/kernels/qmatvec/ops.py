@@ -1,0 +1,24 @@
+"""Jit'd wrapper for the packed decode matvec (used by quant_dense.packed_apply)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qmatvec.kernel import qmatvec_pallas
+from repro.kernels.qmatvec.ref import qmatvec_ref
+
+__all__ = ["qmatvec"]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def qmatvec(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray, *,
+            k: int, interpret: bool | None = None) -> jnp.ndarray:
+    """(..., K) against container-packed (KP, N) weights -> (..., N)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k)
+    out = qmatvec_pallas(x2, w_packed, delta, interpret=interpret)
+    return out.reshape(*lead, w_packed.shape[-1])

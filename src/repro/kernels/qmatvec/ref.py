@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the packed-container decode matvec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.packing import unpack_matrix
+
+__all__ = ["qmatvec_ref"]
+
+
+def qmatvec_ref(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray,
+                k: int, bits: int = 3, out_dtype=None) -> jnp.ndarray:
+    """x (B, K) @ unpack(w_packed (ceil(K/f), N)) * delta -> (B, N)."""
+    out_dtype = out_dtype or x.dtype
+    w = unpack_matrix(w_packed, k, bits).astype(jnp.float32)
+    acc = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return (acc * jnp.asarray(delta, jnp.float32)).astype(out_dtype)

@@ -1,0 +1,45 @@
+"""Pallas elementwise kernel for the piecewise-linear sigmoid.
+
+On the FPGA this is combinational logic between tiles (paper §3); on TPU it
+is a VPU-only elementwise op fused over VMEM tiles — included for paper
+fidelity and as the activation epilogue of the quantized MLP path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.sigmoid_pw.ref import sigmoid_pw as _pw
+
+__all__ = ["sigmoid_pw_pallas"]
+
+_LANES = 128
+_SUBLANES = 8
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = _pw(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sigmoid_pw_pallas(x: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    shape = x.shape
+    n = x.size
+    cols = _LANES
+    rows = -(-n // cols)
+    rows_pad = -(-rows // _SUBLANES) * _SUBLANES
+    xf = jnp.pad(x.reshape(-1), (0, rows_pad * cols - n)).reshape(rows_pad, cols)
+    block_r = min(rows_pad, 512)
+    grid = (rows_pad // block_r,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_r, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_pad, cols), x.dtype),
+        interpret=interpret,
+    )(xf)
+    return out.reshape(-1)[:n].reshape(shape)

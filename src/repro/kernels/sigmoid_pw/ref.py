@@ -1,0 +1,33 @@
+"""Piecewise-linear sigmoid (paper §3, ref [16]) — jnp oracle.
+
+The paper implements the sigmoid as minimized combinational logic on 8-bit
+signals. The classic PLAN approximation (Amin, Curtis & Hayes-Gill 1997 — the
+same family of hardware-friendly piecewise fits as Tommiska's [16] SOP form)
+uses power-of-two slopes so hardware needs only shifts:
+
+    y(|x|) = 1                      |x| >= 5
+           = 0.03125|x| + 0.84375   2.375 <= |x| < 5
+           = 0.125 |x| + 0.625      1     <= |x| < 2.375
+           = 0.25  |x| + 0.5        0     <= |x| < 1
+    y(-x)  = 1 - y(x)
+
+Max abs error vs exact sigmoid: 0.0189 — below the paper's 8-bit signal
+quantum tolerance context (1/256 ~ 0.0039 per level, error spans ~5 levels,
+matching the fidelity class of [16]).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["sigmoid_pw"]
+
+
+def sigmoid_pw(x: jnp.ndarray) -> jnp.ndarray:
+    xf = jnp.abs(x.astype(jnp.float32))
+    y = jnp.where(
+        xf >= 5.0, 1.0,
+        jnp.where(xf >= 2.375, 0.03125 * xf + 0.84375,
+                  jnp.where(xf >= 1.0, 0.125 * xf + 0.625,
+                            0.25 * xf + 0.5)))
+    y = jnp.where(x < 0, 1.0 - y, y)
+    return y.astype(x.dtype)

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (deliverable e): for every (architecture x input-shape x
+mesh), jit the real train/serve step with full shardings, ``.lower()``,
+``.compile()``, and record memory_analysis / cost_analysis / collective bytes
+into results/dryrun/*.json. Single-pod cells additionally lower the L0/L1
+(hybrid: L0/G1/A1) reduced-depth variants that the roofline assembly uses to
+undo XLA's body-counted-once while-loop cost accounting.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, LM_SHAPES, get_config, shape_by_name
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, input_specs  # noqa: F401 (public API)
+
+OUT_DIR = "results/dryrun"
+
+
+def cell_id(arch, shape, mesh_name, quant):
+    return f"{arch}__{shape}__{mesh_name}__{quant}"
+
+
+def runnable_shapes(cfg):
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue   # skip documented in DESIGN §6 / EXPERIMENTS §Dry-run
+        out.append(s)
+    return out
+
+
+def lower_one(cfg, shape, mesh, quant, layers_override=None, tcfg=None):
+    t0 = time.time()
+    with mesh:
+        cell = build_cell(cfg, shape, mesh, quant=quant,
+                          num_layers_override=layers_override, tcfg=tcfg,
+                          cost_exact=layers_override is not None)
+        jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate)
+        lowered = jf.lower(*cell.args)
+        compiled = lowered.compile()
+    rec = {
+        "cost": hlo_analysis.cost_summary(compiled),
+        "memory": hlo_analysis.memory_summary(compiled),
+        "collectives": hlo_analysis.collective_bytes(compiled.as_text()),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    del compiled, lowered
+    return rec
+
+
+def aux_overrides(cfg):
+    """Reduced-depth lowerings for roofline cost reconstruction."""
+    if cfg.family == "hybrid":
+        return {"L0": 0, "G1": cfg.attn_every, "A1": 1}
+    return {"L0": 0, "L1": 1}
+
+
+def prefill_seq_samples(cfg):
+    """Cost-exact unrolling at 32k is compile-prohibitive for chunked inner
+    loops; every cost term is polynomial (<=2) in S, so three samples pin the
+    exact quadratic, evaluated at the true S (benchmarks.roofline).
+    SWA archs sample above 2x window to stay in the linear windowed regime."""
+    if cfg.sliding_window:
+        w = cfg.sliding_window
+        return [2 * w, 3 * w, 4 * w]
+    return [1024, 2048, 4096]
+
+
+def run_cell(arch, shape_name, mesh_name, quant, *, force=False,
+             with_aux=True):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cid = cell_id(arch, shape_name, mesh_name, quant)
+    path = os.path.join(OUT_DIR, cid + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip] {cid} (cached)")
+        return json.load(open(path))
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    print(f"[run ] {cid} ...", flush=True)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "quant": quant, "num_layers": cfg.num_layers,
+           "attn_every": cfg.attn_every,
+           "params": cfg.param_count(),
+           "active_params": cfg.active_param_count(),
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+           "kind": shape.kind}
+    try:
+        rec["full"] = lower_one(cfg, shape, mesh, quant)
+        if with_aux and mesh_name == "single":
+            import dataclasses as dc
+
+            from repro.configs.base import TrainConfig
+            aux_tcfg = TrainConfig(microbatches=1) if shape.kind == "train" else None
+            if shape.kind == "prefill":
+                rec["aux_scheme"] = "seqfit"
+                samples = prefill_seq_samples(cfg)
+                rec["seq_samples"] = samples
+                for s in samples:
+                    sshape = dc.replace(shape, seq_len=s)
+                    for name, ov in aux_overrides(cfg).items():
+                        rec[f"{name}@{s}"] = lower_one(
+                            cfg, sshape, mesh, quant, layers_override=ov)
+            else:
+                rec["aux_scheme"] = "exact"
+                for name, ov in aux_overrides(cfg).items():
+                    rec[name] = lower_one(cfg, shape, mesh, quant,
+                                          layers_override=ov, tcfg=aux_tcfg)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(rec["traceback"])
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f, indent=2)
+    os.replace(tmp, path)
+    print(f"[{'ok' if rec['status'] == 'ok' else 'ERR '}] {cid} "
+          f"({rec.get('full', {}).get('compile_s', '?')}s)", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--quant", default="w3")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-aux", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    # smallest-first banking: cheap archs compile first
+    archs.sort(key=lambda a: get_config(a).param_count())
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else \
+            [s.name for s in runnable_shapes(cfg)]
+        for sname in shapes:
+            for mname in meshes:
+                rec = run_cell(arch, sname, mname, args.quant,
+                               force=args.force, with_aux=not args.no_aux)
+                failures += rec["status"] != "ok"
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^^ before any jax import (same contract as dryrun.py).
+
+"""Perf hillclimbing (§Perf): lower a cell under a named VARIANT of the
+build knobs, reconstruct exact roofline terms (same L0/L1 methodology as the
+dry-run), and append hypothesis→change→before→after→verdict records to
+results/perf_log.json.
+
+    PYTHONPATH=src:. python -m repro.launch.hillclimb --cell qwen3-32b:decode_32k \
+        --variant quant=float --hypothesis "..." --baseline
+"""
+import argparse
+import json
+import time
+
+import jax
+
+from benchmarks import roofline as rl
+from repro.configs import TrainConfig, get_config, shape_by_name
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import aux_overrides
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+LOG = "results/perf_log.json"
+
+
+def lower_variant(arch: str, shape_name: str, knobs: dict, mesh=None):
+    """Full + aux lowerings under knobs; returns a dry-run-style record."""
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = mesh or make_production_mesh()
+    rec = {"arch": arch, "shape": shape_name, "mesh": "single",
+           "quant": knobs.get("quant", "w3"),
+           "num_layers": cfg.num_layers, "attn_every": cfg.attn_every,
+           "params": cfg.param_count(),
+           "active_params": cfg.active_param_count(),
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+           "kind": shape.kind, "status": "ok", "knobs": knobs}
+
+    def one(layers_override=None):
+        tcfg = None
+        if shape.kind == "train":
+            micro = knobs.get("microbatches")
+            tcfg = TrainConfig(
+                microbatches=1 if layers_override is not None else (micro or 1),
+                remat=knobs.get("remat", "layer"))
+            if micro and layers_override is None:
+                tcfg = TrainConfig(microbatches=micro,
+                                   remat=knobs.get("remat", "layer"))
+        t0 = time.time()
+        with mesh:
+            cell = build_cell(
+                cfg, shape, mesh,
+                quant=knobs.get("quant", "w3"),
+                attn_chunk=knobs.get("attn_chunk", 1024),
+                fsdp=knobs.get("fsdp"),
+                ssd_chunk=knobs.get("ssd_chunk", 0),
+                kv8=bool(knobs.get("kv8", False)),
+                tcfg=tcfg,
+                num_layers_override=layers_override,
+                cost_exact=layers_override is not None)
+            jf = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate)
+            compiled = jf.lower(*cell.args).compile()
+        return {"cost": hlo_analysis.cost_summary(compiled),
+                "memory": hlo_analysis.memory_summary(compiled),
+                "collectives": hlo_analysis.collective_bytes(compiled.as_text()),
+                "compile_s": round(time.time() - t0, 1)}
+
+    rec["full"] = one()
+    for name, ov in aux_overrides(cfg).items():
+        rec[name] = one(ov)
+    return rec
+
+
+def measure(arch, shape_name, knobs):
+    rec = lower_variant(arch, shape_name, knobs)
+    terms = rl.analyze_cell(rec)
+    return rec, terms
+
+
+def append_log(cell_key: str, entry: dict):
+    log = json.load(open(LOG)) if os.path.exists(LOG) else {}
+    log.setdefault(cell_key, []).append(entry)
+    os.makedirs("results", exist_ok=True)
+    json.dump(log, open(LOG, "w"), indent=2)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variant", default="", help="k=v,k=v knobs")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--change", default="")
+    args = ap.parse_args()
+    arch, shape_name = args.cell.split(":")
+    knobs = {}
+    for kv in filter(None, args.variant.split(",")):
+        k, v = kv.split("=")
+        knobs[k] = (v if k == "quant" else
+                    v == "true" if v in ("true", "false") else int(v))
+    rec, terms = measure(arch, shape_name, knobs)
+    print(json.dumps(terms, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving launcher: quantize-and-serve any assigned arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.precision import FLOAT, W3A8
+from repro.models import get_model
+from repro.serving.engine import ServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--quant", default="w3", choices=["float", "w3"])
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    if args.quant == "w3":
+        params = quant_dense.export_container(params, W3A8)
+        policy = W3A8
+    else:
+        policy = FLOAT
+
+    eng = ServingEngine(params, cfg, policy=policy, slots=args.slots,
+                        max_len=64 + args.max_new)
+    t0 = time.time()
+    for i in range(args.requests):
+        eng.submit([1 + i, 2, 3, 4 + i], max_new=args.max_new)
+    done = eng.run_all()
+    dt = time.time() - t0
+    toks = sum(len(r.out) for r in done)
+    print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s on CPU)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.api import get_model, init_cache
+
+__all__ = ["get_model", "init_cache"]

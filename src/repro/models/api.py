@@ -1,0 +1,38 @@
+"""Unified model interface: ``get_model(cfg)`` returns the family module.
+
+Every module exposes:
+    init(key, cfg, dtype)                               -> params
+    forward(params, batch, cfg, *, policy, deltas, ...) -> (logits, aux)
+    prefill(params, batch, cfg, *, policy, ...)         -> (logits, cache)
+    decode_step(params, cache, tokens, cfg, *, policy)  -> (logits, cache)
+    init_cache/init_state(cfg, batch, max_len, ...)     -> cache
+"""
+from __future__ import annotations
+
+from types import ModuleType
+
+from repro.configs.base import ModelConfig
+from repro.models import hybrid, mamba2, transformer
+
+__all__ = ["get_model", "init_cache"]
+
+_FAMILY_MODULE = {
+    "dense": transformer, "audio": transformer, "vlm": transformer,
+    "moe": transformer,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    return _FAMILY_MODULE[cfg.family]
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    import jax.numpy as jnp
+
+    dtype = dtype or jnp.bfloat16
+    mod = get_model(cfg)
+    if cfg.family == "ssm":
+        return mod.init_state(cfg, batch, max_len, dtype)
+    return mod.init_cache(cfg, batch, max_len, dtype)

@@ -1,0 +1,161 @@
+"""Attention: GQA with chunked online-softmax (memory O(seq·chunk), never
+materializes the full score matrix) + sliding-window path + decode step.
+
+Shapes: q (B, Lq, H, D); k/v (B, Lkv, KV, D); GQA groups G = H // KV.
+The chunked scan keeps running (max, sum, acc) per q position — the standard
+flash-attention recurrence expressed in pure JAX (``jax.lax.scan`` over KV
+chunks). XLA fuses each chunk's QK^T+softmax+PV; on TPU the same structure is
+what a Pallas flash kernel would tile, so the dry-run HLO reflects realistic
+memory behaviour at 32k/500k sequence lengths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_attention", "decode_attention", "sliding_window_attention"]
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q (B,Lq,KV,G,D) x k (B,Lc,KV,D) -> (B,KV,G,Lq,Lc), fp32."""
+    return jnp.einsum("bqkgd,bckd->bkgqc", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """p (B,KV,G,Lq,Lc) x v (B,Lc,KV,D) -> (B,Lq,KV,G,D)."""
+    return jnp.einsum("bkgqc,bckd->bqkgd", p, v)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, chunk: int = 1024,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill: 0;
+    chunked decode batches: cache length).
+    """
+    b, lq, h, d = q.shape
+    _, lkv, kv, _ = k.shape
+    g = h // kv
+    chunk = min(chunk, lkv)
+    nchunks = -(-lkv // chunk)
+    pad = nchunks * chunk - lkv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = 1.0 / (d ** 0.5)
+    qr = (q * scale).reshape(b, lq, kv, g, d)
+    kc = k.reshape(b, nchunks, chunk, kv, d)
+    vc = v.reshape(b, nchunks, chunk, kv, d)
+    q_pos = q_offset + jnp.arange(lq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, c0 = xs                                    # chunk kv + start idx
+        s = _gqa_scores(qr, kb)                            # (B,KV,G,Lq,C)
+        kv_pos = c0 + jnp.arange(chunk)
+        mask = jnp.broadcast_to(kv_pos[None, :] < lkv, (lq, chunk))  # pad guard
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p.astype(v.dtype), vb).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    from repro.distributed.context import inner_unroll
+    m0 = jnp.full((b, kv, g, lq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, lq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, lq, d), jnp.float32)
+    starts = jnp.arange(nchunks) * chunk
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), starts),
+        unroll=True if inner_unroll() else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, lq, h, d).astype(q.dtype)
+
+
+def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                             window: int, chunk: int = 1024) -> jnp.ndarray:
+    """Causal SWA: each q sees at most ``window`` previous kv. O(L*window).
+
+    Processes q in chunks; per q-chunk slices kv[start-window : start+chunk]
+    (static size window+chunk) and runs plain masked attention on the slice.
+    """
+    b, l, h, d = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    chunk = min(chunk, l)
+    nq = -(-l // chunk)
+    pad = nq * chunk - l
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    span = window + chunk
+    # left-pad kv by `window` so every slice is in range
+    kp = jnp.pad(k, ((0, 0), (window, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (window, pad), (0, 0), (0, 0)))
+    scale = 1.0 / (d ** 0.5)
+
+    def q_block(i):
+        s0 = i * chunk                                      # q block start
+        qb = jax.lax.dynamic_slice_in_dim(q, s0, chunk, 1) * scale
+        kb = jax.lax.dynamic_slice_in_dim(kp, s0, span, 1)  # abs pos s0-window..
+        vb = jax.lax.dynamic_slice_in_dim(vp, s0, span, 1)
+        qr = qb.reshape(b, chunk, kv, g, d)
+        sc = _gqa_scores(qr, kb)                            # (B,KV,G,chunk,span)
+        qpos = s0 + jnp.arange(chunk)
+        kpos = s0 - window + jnp.arange(span)
+        mask = (kpos[None, :] <= qpos[:, None]) \
+            & (kpos[None, :] > qpos[:, None] - window) \
+            & (kpos[None, :] >= 0) & (kpos[None, :] < l)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1).astype(v.dtype)
+        return _gqa_out(p, vb).reshape(b, chunk, h, d)
+
+    from repro.distributed.context import inner_unroll
+    _, out = jax.lax.scan(lambda c, i: (c, q_block(i)), None, jnp.arange(nq),
+                          unroll=True if inner_unroll() else 1)  # (nq,B,chunk,H,D)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * chunk, h, d)
+    return out[:, :l].astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     cache_len: jnp.ndarray, k_scale=None, v_scale=None) -> jnp.ndarray:
+    """One-token attention against a (B, S, KV, D) cache. q: (B, 1, H, D).
+
+    ``cache_len``: scalar or (B,) number of valid cache entries. O(S) compute,
+    bound by cache bandwidth — the paper's memory-bound regime on TPU.
+
+    int8 cache support: pass per-token ``k_scale``/``v_scale`` (B, S); the
+    scales factor exactly through the score and value contractions, so the
+    einsums read the int8 arrays directly (half the bf16 cache traffic).
+    """
+    b, _, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / (d ** 0.5)
+    qr = (q * scale).reshape(b, 1, kvh, g, d)
+    kc = k_cache if k_scale is None else k_cache.astype(q.dtype)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qr, kc,
+                    preferred_element_type=jnp.float32)
+    if k_scale is not None:
+        sc = sc * k_scale[:, None, None, None, :]
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.broadcast_to(jnp.asarray(cache_len)[..., None], (b, s))
+    sc = jnp.where(valid[:, None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if v_scale is not None:
+        p = (p * v_scale[:, None, None, None, :]).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(q.dtype))
+    else:
+        p = p.astype(v_cache.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
+    return out.reshape(b, 1, h, d).astype(q.dtype)

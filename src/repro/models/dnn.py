@@ -1,0 +1,70 @@
+"""The paper's feed-forward DNN (§2.1): 784-1022-1022-1022-10 (digit) and
+429-1022x4-61 (phoneme), sigmoid hidden units.
+
+This is the faithful-reproduction model: W3 hidden layers, W8 output layer,
+8-bit signals between layers (policy.act_bits=8), biases full precision. The
+``sigmoid_mode`` flag selects the exact sigmoid or the piecewise-linear
+approximation (paper ref [16] — implemented in kernels/sigmoid_pw with a jnp
+oracle used here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat, quant_dense
+from repro.core.precision import QuantPolicy
+
+__all__ = ["init", "forward", "num_params"]
+
+
+def init(key, input_dim: int, hidden: Sequence[int], num_classes: int,
+         dtype=jnp.float32) -> Dict[str, Any]:
+    dims = [input_dim, *hidden, num_classes]
+    ks = jax.random.split(key, len(dims) - 1)
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        # Glorot's sigmoid gain: sigmoid(x) ~ 0.5 + x/4 attenuates signals 4x
+        # per layer; x4 init keeps unit gain through the 3-4 hidden layers
+        # (without it the 1022-wide net sits on the symmetric plateau).
+        layers.append(quant_dense.init(ks[i], a, b, bias=True, dtype=dtype,
+                                       scale=4.0 / (a ** 0.5)))
+    # the classifier is named 'head' so path-based role inference (treeutil.
+    # role_of) applies the paper's sensitive-output rule (8-bit) everywhere
+    names = [f"fc{i}" for i in range(len(layers) - 1)] + ["head"]
+    return dict(zip(names, layers))
+
+
+def _sigmoid(x: jnp.ndarray, mode: str) -> jnp.ndarray:
+    if mode == "exact":
+        return jax.nn.sigmoid(x)
+    from repro.kernels.sigmoid_pw import ref as sig_ref
+    return sig_ref.sigmoid_pw(x)
+
+
+def forward(params: Dict[str, Any], x: jnp.ndarray, *, policy: QuantPolicy,
+            deltas: Optional[Dict] = None, sigmoid_mode: str = "exact",
+            ) -> jnp.ndarray:
+    """x: (B, input_dim) -> logits (B, classes).
+
+    Layer roles follow the paper exactly: every hidden matrix is 'hidden'
+    (3-bit under W3A8), the final classifier is 'output' (8-bit)."""
+    n = len(params)
+    d = deltas or {}
+    h = x
+    names = [f"fc{i}" for i in range(n - 1)] + ["head"]
+    for i, name in enumerate(names):
+        role = "output" if name == "head" else "hidden"
+        h = quant_dense.apply(params[name], h, policy=policy, role=role,
+                              delta=(d.get(name) or {}).get("w"))
+        if i < n - 1:
+            h = _sigmoid(h, sigmoid_mode)
+            if policy.act_bits:                # paper: 8-bit signals, in [0,1]
+                h = qat.fake_quant_act(h, policy.act_bits, signed=False)
+    return h
+
+
+def num_params(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

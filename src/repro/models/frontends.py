@@ -1,0 +1,29 @@
+"""Modality frontend STUBS per assignment: ``[audio]``/``[vlm]`` archs get
+precomputed frame/patch embeddings — the EnCodec encoder / InternViT tower is
+out of scope; ``input_specs()`` supplies their outputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["frontend_embed_shape", "synthetic_frontend_embeds", "text_len"]
+
+
+def frontend_embed_shape(cfg: ModelConfig, batch: int):
+    """(B, F, d_model) precomputed embedding stand-in shape."""
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Token positions left for text when the frontend prefix is included."""
+    if cfg.frontend is None:
+        return seq_len
+    return max(seq_len - cfg.frontend_tokens, 1)
+
+
+def synthetic_frontend_embeds(key, cfg: ModelConfig, batch: int,
+                              dtype=jnp.bfloat16) -> jnp.ndarray:
+    return jax.random.normal(key, frontend_embed_shape(cfg, batch), dtype) * 0.02

@@ -1,0 +1,223 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every ``attn_every`` layers (arXiv:2411.15242).
+
+Layout: ``num_layers = n_groups * attn_every + n_tail``. Each group = a scan
+over ``attn_every`` mamba blocks followed by the shared transformer block
+(same weights every application — closed over, not scanned). Decode keeps one
+KV cache per application (n_groups caches) + per-layer mamba states.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant_dense
+from repro.core.precision import QuantPolicy
+from repro.distributed.context import constrain
+from repro.models import mamba2, transformer
+from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
+
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+
+
+def _counts(cfg: ModelConfig) -> Tuple[int, int]:
+    n_groups = cfg.num_layers // cfg.attn_every
+    n_tail = cfg.num_layers % cfg.attn_every
+    return n_groups, n_tail
+
+
+def _dget(deltas, *names):
+    node = deltas
+    for n in names:
+        if node is None:
+            return None
+        node = node.get(n)
+    return node
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    n_groups, n_tail = _counts(cfg)
+    ks = jax.random.split(key, 5)
+    gkeys = jax.random.split(ks[0], n_groups * cfg.attn_every).reshape(
+        n_groups, cfg.attn_every, 2)
+    groups = jax.vmap(jax.vmap(lambda k: mamba2.block_init(k, cfg, dtype)))(gkeys)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+        "groups": groups,
+        "shared": transformer._layer_init(ks[2], cfg, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    if n_tail:
+        tkeys = jax.random.split(ks[3], n_tail)
+        params["tail"] = jax.vmap(lambda k: mamba2.block_init(k, cfg, dtype))(tkeys)
+    if not cfg.tie_embeddings:
+        params["head"] = quant_dense.init(ks[4], cfg.d_model, cfg.vocab_size,
+                                          bias=False, dtype=dtype)
+    return params
+
+
+def _mamba_scan(stack, dstack, h, cfg, policy, chunk, remat: str,
+                return_state: bool = False):
+    from repro.distributed.context import inner_unroll
+
+    def body(hh, xs):
+        lp, ld = xs
+        if return_state:
+            out, st = mamba2.block_apply(lp, hh, cfg, policy=policy, deltas=ld,
+                                         chunk=chunk, return_state=True)
+            return out, st
+        return mamba2.block_apply(lp, hh, cfg, policy=policy, deltas=ld,
+                                  chunk=chunk), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    # cost-exact mode unrolls: this is the INNER loop of the hybrid group
+    # scan — the L0/G1/A1 decomposition needs its body counted A times
+    return jax.lax.scan(body, h, (stack, dstack),
+                        unroll=True if inner_unroll() else 1)
+
+
+def forward(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
+            deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
+            remat: str = "layer", attn_chunk: int = 1024,
+            chunk: int = mamba2.DEFAULT_CHUNK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    n_groups, n_tail = _counts(cfg)
+    h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    h = constrain(h, "act")
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+    inv_freq = transformer.rope_freqs(cfg.head_dim, cfg.rope_theta)
+    shared, sdelta = params["shared"], _dget(deltas, "shared")
+
+    def group_body(hh, xs):
+        gp, gd = xs
+        hh, _ = _mamba_scan(gp, gd, hh, cfg, policy, chunk, remat)
+        hh, _, _ = transformer._layer_forward(shared, sdelta, hh, cfg, policy,
+                                              positions, inv_freq, attn_chunk)
+        return hh, None
+
+    gd = _dget(deltas, "groups")
+    h, _ = jax.lax.scan(group_body, h, (params["groups"], gd))
+    if n_tail:
+        h, _ = _mamba_scan(params["tail"], _dget(deltas, "tail"), h, cfg,
+                           policy, chunk, remat)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(params, h, cfg, policy, deltas), jnp.zeros((), jnp.float32)
+
+
+def _logits(params, h, cfg, policy, deltas):
+    if cfg.tie_embeddings:
+        out = embed_logits(params["embed"], h, policy=policy,
+                           delta=_dget(deltas, "embed", "w"))
+    else:
+        out = quant_dense.apply(params["head"], h, policy=policy, role="output",
+                                delta=_dget(deltas, "head", "w"))
+    return constrain(out.astype(jnp.float32), "logits")
+
+
+# --- serving -----------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_groups, n_tail = _counts(cfg)
+    one = mamba2.block_state(cfg, batch)
+    state = {
+        "groups": jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x, (n_groups, cfg.attn_every) + x.shape), one),
+        "kv": {"k": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads,
+                               cfg.head_dim), dtype),
+               "v": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads,
+                               cfg.head_dim), dtype)},
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if n_tail:
+        state["tail"] = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_tail,) + x.shape), one)
+    return state
+
+
+def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
+            deltas=None, dtype=jnp.bfloat16, attn_chunk: int = 1024,
+            max_len: Optional[int] = None, chunk: int = mamba2.DEFAULT_CHUNK):
+    n_groups, n_tail = _counts(cfg)
+    bsz, s = batch["tokens"].shape
+    max_len = max_len or s
+    h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    positions = jnp.arange(s)[None, :]
+    inv_freq = transformer.rope_freqs(cfg.head_dim, cfg.rope_theta)
+    shared, sdelta = params["shared"], _dget(deltas, "shared")
+
+    def group_body(hh, xs):
+        gp, gd = xs
+        hh, mstates = _mamba_scan(gp, gd, hh, cfg, policy, chunk, "none",
+                                  return_state=True)
+        hh, _, (k, v) = transformer._layer_forward(
+            shared, sdelta, hh, cfg, policy, positions, inv_freq, attn_chunk)
+        return hh, (mstates, k, v)
+
+    gd = _dget(deltas, "groups")
+    h, (gstates, ks, vs) = jax.lax.scan(group_body, h, (params["groups"], gd))
+    state = init_cache(cfg, bsz, max_len, dtype)
+    state["groups"] = gstates
+    pad = max_len - s
+    state["kv"]["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+    state["kv"]["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+    if n_tail:
+        h, tstates = _mamba_scan(params["tail"], _dget(deltas, "tail"), h, cfg,
+                                 policy, chunk, "none", return_state=True)
+        state["tail"] = tstates
+    state["len"] = jnp.asarray(s, jnp.int32)
+    hln = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    return _logits(params, hln, cfg, policy, deltas), state
+
+
+def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16):
+    n_groups, n_tail = _counts(cfg)
+    b = tokens.shape[0]
+    pos = state["len"]
+    h = embed_lookup(params["embed"], tokens, policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    inv_freq = transformer.rope_freqs(cfg.head_dim, cfg.rope_theta)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    shared, sdelta = params["shared"], _dget(deltas, "shared")
+
+    def mamba_body(hh, xs):
+        lp, ld, st = xs
+        hh, st2 = mamba2.block_decode(lp, hh, st, cfg, policy=policy, deltas=ld)
+        return hh, st2
+
+    def group_body(hh, xs):
+        gp, gd, gst, kc, vc = xs
+        hh, gst2 = jax.lax.scan(mamba_body, hh, (gp, gd, gst))
+        hn = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
+        q, k, v = transformer._qkv(shared, hn, cfg, policy, sdelta, positions,
+                                   inv_freq)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        from repro.models.attention import decode_attention
+        o = decode_attention(q, kc, vc, jnp.full((b,), pos + 1))
+        hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, 1)
+        hn = rmsnorm(shared["ln2"], hh, cfg.norm_eps)
+        f, _ = transformer._ffn(shared, hn, cfg, policy, sdelta)
+        return hh + f, (gst2, kc, vc)
+
+    gd = _dget(deltas, "groups")
+    h, (gstates, ks, vs) = jax.lax.scan(
+        group_body, h,
+        (params["groups"], gd, state["groups"], state["kv"]["k"], state["kv"]["v"]))
+    new_state = dict(state)
+    new_state["groups"] = gstates
+    new_state["kv"] = {"k": ks, "v": vs}
+    if n_tail:
+        h, tstates = jax.lax.scan(
+            mamba_body, h, (params["tail"], _dget(deltas, "tail"), state["tail"]))
+        new_state["tail"] = tstates
+    new_state["len"] = pos + 1
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return _logits(params, h, cfg, policy, deltas), new_state

@@ -1,0 +1,115 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings — all quantizable.
+
+Every weight matmul routes through ``repro.core.quant_dense.apply`` so the
+paper's W3A8 policy applies uniformly across the zoo. Norms/biases stay fp32
+per the paper (§2.1 keeps only weight matrices fixed-point).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qat, quant_dense
+from repro.core.precision import QuantPolicy
+
+__all__ = ["rmsnorm_init", "rmsnorm", "rope_freqs", "apply_rope",
+           "mlp_init", "mlp_apply", "embed_init", "embed_lookup", "act_fn"]
+
+
+# --- norms --------------------------------------------------------------------
+
+def rmsnorm_init(dim: int) -> Dict[str, Any]:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params: Dict[str, Any], x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """qk-norm: RMSNorm over the head_dim of (..., H, D) tensors."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# --- rotary embeddings ----------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape (head_dim//2,), fp32."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """Rotate (..., S, H, D). ``positions``: (..., S) int32."""
+    ang = positions[..., :, None].astype(jnp.float32) * inv_freq  # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- activations ----------------------------------------------------------------
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu,
+            "sigmoid": jax.nn.sigmoid, "relu": jax.nn.relu}[name]
+
+
+# --- MLP ------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, act: str = "silu",
+             dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    p = {"up": quant_dense.init(ks[0], d_model, d_ff, bias=False, dtype=dtype),
+         "down": quant_dense.init(ks[1], d_ff, d_model, bias=False, dtype=dtype)}
+    if act == "silu":  # SwiGLU
+        p["gate"] = quant_dense.init(ks[2], d_model, d_ff, bias=False, dtype=dtype)
+    return p
+
+
+def mlp_apply(params: Dict[str, Any], x: jnp.ndarray, *, act: str,
+              policy: QuantPolicy, deltas: Optional[Dict] = None) -> jnp.ndarray:
+    d = deltas or {}
+    fn = act_fn(act)
+    up = quant_dense.apply(params["up"], x, policy=policy, role="hidden",
+                           delta=(d.get("up") or {}).get("w"))
+    if "gate" in params:
+        gate = quant_dense.apply(params["gate"], x, policy=policy, role="hidden",
+                                 delta=(d.get("gate") or {}).get("w"))
+        h = fn(gate) * up
+    else:
+        h = fn(up)
+    if policy.act_bits:
+        h = qat.fake_quant_act(h, policy.act_bits)
+    return quant_dense.apply(params["down"], h, policy=policy, role="hidden",
+                             delta=(d.get("down") or {}).get("w"))
+
+
+# --- embeddings -----------------------------------------------------------------
+
+def embed_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> Dict[str, Any]:
+    w = jax.random.normal(key, (vocab, d_model), dtype) * 0.02
+    return {"w": w}
+
+
+def embed_lookup(params: Dict[str, Any], tokens: jnp.ndarray, *,
+                 policy: QuantPolicy, delta=None, dtype=jnp.bfloat16) -> jnp.ndarray:
+    if "q" in params:          # serve form: gather int8 rows, then dequantize
+        rows = params["q"][tokens].astype(jnp.float32) * params["delta"]
+        return rows.astype(dtype)
+    w = quant_dense.effective_weight(params, policy, "embed", delta)
+    return w.astype(dtype)[tokens]
+
+
+def embed_logits(params: Dict[str, Any], h: jnp.ndarray, *,
+                 policy: QuantPolicy, delta=None) -> jnp.ndarray:
+    """Tied-embedding readout: h @ E^T (role 'output', 8-bit per paper)."""
+    w = quant_dense.effective_weight(params, policy, "output", delta)
+    return h @ w.astype(h.dtype).T

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN block (phi3.5-moe 16e/top-2, mixtral-8x22b 8e/top-2).
+
+Capacity-based dense dispatch (Mesh-TF / MaxText style): tokens are grouped,
+routed top-k, and moved to (expert, capacity) buffers with one-hot einsums —
+the formulation XLA's SPMD partitioner turns into all-to-alls under expert
+sharding. Dropping beyond capacity, standard aux load-balancing loss.
+
+Quantization: expert up/gate/down weights carry role 'hidden' (W3 under the
+paper's policy); the router is small and sensitive — role 'router' (W8),
+mirroring the paper's 8-bit output layer.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant_dense
+from repro.core.precision import QuantPolicy
+from repro.distributed.context import constrain
+from repro.models.layers import act_fn
+
+__all__ = ["moe_init", "moe_apply"]
+
+GROUP_SIZE = 512  # tokens per routing group (keeps dispatch tensors small)
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / (d ** 0.5)
+    p = {
+        "router": {"w": jax.random.normal(ks[0], (d, e), dtype) * 0.02},
+        "up": {"w": jax.random.uniform(ks[1], (e, d, f), dtype, -1, 1) * scale},
+        "down": {"w": jax.random.uniform(ks[2], (e, f, d), dtype, -1, 1) / (f ** 0.5)},
+    }
+    if cfg.mlp_act == "silu":
+        p["gate"] = {"w": jax.random.uniform(ks[3], (e, d, f), dtype, -1, 1) * scale}
+    return p
+
+
+def _expert_weight(params, name, policy: QuantPolicy, deltas) -> jnp.ndarray:
+    d = ((deltas or {}).get(name) or {}).get("w") if deltas else None
+    return quant_dense.effective_weight(params[name], policy, "hidden", d)
+
+
+def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
+              policy: QuantPolicy, deltas: Optional[Dict] = None,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    g = min(GROUP_SIZE, t)
+    ng = t // g if t % g == 0 else 1
+    if t % g != 0:                      # tiny smoke shapes: single group
+        g = t
+    xg = x.reshape(ng, g, d)
+
+    rd = ((deltas or {}).get("router") or {}).get("w") if deltas else None
+    wr = quant_dense.effective_weight(params["router"], policy, "router", rd)
+    logits = jnp.einsum("ngd,de->nge", xg, wr.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # (ng,g,E) fp32
+    top_p, top_i = jax.lax.top_k(probs, k)                      # (ng,g,k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch): E * sum(frac_tokens * frac_probs)
+    density = jnp.mean(jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=1)
+    density_p = jnp.mean(probs, axis=1)
+    aux = jnp.mean(jnp.sum(density * density_p, axis=-1)) * (e ** 2) / k
+
+    cap = max(1, int(cfg.capacity_factor * g * k / e))
+    # choice-major flattening: choice 0 of every token outranks choice 1
+    sel = jax.nn.one_hot(top_i.transpose(0, 2, 1).reshape(ng, k * g), e,
+                         dtype=jnp.int32)                       # (ng, kg, E)
+    pos = jnp.cumsum(sel, axis=1) - 1                           # position in expert
+    keep = (pos < cap) & (sel > 0)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, -1), cap, dtype=x.dtype)
+    disp = sel.astype(x.dtype)[..., None] * pos_oh              # (ng,kg,E,C)
+    disp = constrain(disp, "moe_dispatch")
+
+    wts = top_p.transpose(0, 2, 1).reshape(ng, k * g).astype(x.dtype)
+    comb = disp * wts[..., None, None]                          # (ng,kg,E,C)
+
+    xk = jnp.tile(xg, (1, k, 1))                                # (ng, kg, d)
+    buf = jnp.einsum("nte,ntd->ned", disp.reshape(ng, k * g, e * cap), xk)
+    buf = buf.reshape(ng, e, cap, d)
+    buf = constrain(buf, "moe_buffer")
+
+    act = act_fn(cfg.mlp_act)
+    w_up = _expert_weight(params, "up", policy, deltas).astype(x.dtype)
+    w_dn = _expert_weight(params, "down", policy, deltas).astype(x.dtype)
+    h = jnp.einsum("necd,edf->necf", buf, w_up)
+    if "gate" in params:
+        w_gt = _expert_weight(params, "gate", policy, deltas).astype(x.dtype)
+        h = act(jnp.einsum("necd,edf->necf", buf, w_gt)) * h
+    else:
+        h = act(h)
+    out_buf = jnp.einsum("necf,efd->necd", h, w_dn)
+    out_buf = constrain(out_buf, "moe_buffer")
+
+    yk = jnp.einsum("nte,ned->ntd", comb.reshape(ng, k * g, e * cap),
+                    out_buf.reshape(ng, e * cap, d))            # (ng, kg, d)
+    y = jnp.sum(yk.reshape(ng, k, g, d), axis=1)
+    return y.reshape(b, s, d), aux.astype(jnp.float32)

@@ -1,0 +1,330 @@
+"""Decoder-only transformer backbone (dense / audio / vlm / moe families).
+
+Features per assigned-arch requirements: GQA (num_kv_heads < num_heads),
+qk_norm (qwen3), QKV bias (qwen2/2.5), sliding-window attention (mixtral),
+RoPE, tied embeddings, MoE FFN (phi3.5/mixtral), frontend-embedding prefix
+([audio]/[vlm] stubs). Layers run under ``jax.lax.scan`` with stacked params
+(compile once per layer — mandatory at 64L/512-device lowering scale) and
+optional remat.
+
+Every projection goes through ``quant_dense`` so the paper's W3A8 policy
+applies: wq/wk/wv/wo + FFN are role 'hidden' (3-bit), embed role 'embed',
+LM head role 'output' (8-bit, the paper's sensitive-layer rule).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant_dense
+from repro.core.precision import QuantPolicy
+from repro.distributed.context import constrain
+from repro.models import moe as moe_mod
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    sliding_window_attention)
+from repro.models.layers import (apply_rope, embed_init, embed_logits,
+                                 embed_lookup, head_rmsnorm, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init, rope_freqs)
+
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+
+
+# --- init -----------------------------------------------------------------------
+
+def _attn_init(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": quant_dense.init(ks[0], d, h * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": quant_dense.init(ks[1], d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": quant_dense.init(ks[2], d, kv * hd, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": quant_dense.init(ks[3], h * hd, d, bias=False, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), jnp.float32)}
+    return p
+
+
+def _layer_init(key, cfg: ModelConfig, dtype) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    p = {"ln1": rmsnorm_init(cfg.d_model), "ln2": rmsnorm_init(cfg.d_model),
+         "attn": _attn_init(ks[0], cfg, dtype)}
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.num_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys)
+    params = {"embed": embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+              "layers": layers, "final_norm": rmsnorm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["head"] = quant_dense.init(ks[2], cfg.d_model, cfg.vocab_size,
+                                          bias=False, dtype=dtype)
+    return params
+
+
+# --- attention block --------------------------------------------------------------
+
+def _dget(deltas, *names):
+    node = deltas
+    for n in names:
+        if node is None:
+            return None
+        node = node.get(n)
+    return node
+
+
+def _qkv(lp, h, cfg: ModelConfig, policy, deltas, positions, inv_freq):
+    b, s, _ = h.shape
+    hd = cfg.head_dim
+    q = quant_dense.apply(lp["attn"]["wq"], h, policy=policy, role="hidden",
+                          delta=_dget(deltas, "attn", "wq", "w"))
+    k = quant_dense.apply(lp["attn"]["wk"], h, policy=policy, role="hidden",
+                          delta=_dget(deltas, "attn", "wk", "w"))
+    v = quant_dense.apply(lp["attn"]["wv"], h, policy=policy, role="hidden",
+                          delta=_dget(deltas, "attn", "wv", "w"))
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = head_rmsnorm(lp["attn"]["q_norm"]["scale"], q, cfg.norm_eps)
+        k = head_rmsnorm(lp["attn"]["k_norm"]["scale"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+    return q, k, v
+
+
+def _attn_out(lp, o, cfg, policy, deltas, b, s):
+    o = o.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    return quant_dense.apply(lp["attn"]["wo"], o, policy=policy, role="hidden",
+                             delta=_dget(deltas, "attn", "wo", "w"))
+
+
+def _ffn(lp, h, cfg: ModelConfig, policy, deltas):
+    """Returns (out, aux_loss)."""
+    if cfg.family == "moe":
+        return moe_mod.moe_apply(lp["moe"], h, cfg, policy=policy,
+                                 deltas=_dget(deltas, "moe"))
+    out = mlp_apply(lp["mlp"], h, act=cfg.mlp_act, policy=policy,
+                    deltas=_dget(deltas, "mlp"))
+    return out, jnp.zeros((), jnp.float32)
+
+
+def _layer_forward(lp, ld, h, cfg: ModelConfig, policy, positions, inv_freq,
+                   attn_chunk: int):
+    b, s, _ = h.shape
+    hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+    q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq)
+    if cfg.sliding_window:
+        o = sliding_window_attention(q, k, v, window=cfg.sliding_window,
+                                     chunk=min(attn_chunk, s))
+    else:
+        o = chunked_attention(q, k, v, causal=True, chunk=min(attn_chunk, s))
+    h = h + _attn_out(lp, o, cfg, policy, ld, b, s)
+    h = constrain(h, "act")
+    hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+    f, aux = _ffn(lp, hn, cfg, policy, ld)
+    h = constrain(h + f, "act")
+    return h, aux, (k, v)
+
+
+# --- full forward (train) ----------------------------------------------------------
+
+def _embed_input(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+                 policy, deltas, dtype):
+    """Token embeddings, with frontend prefix for [audio]/[vlm] stubs."""
+    h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    if cfg.frontend is not None and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(dtype)
+        h = jnp.concatenate([fe, h], axis=1)
+    return h
+
+
+def forward(params: Dict[str, Any], batch: Dict[str, jnp.ndarray],
+            cfg: ModelConfig, *, policy: QuantPolicy,
+            deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
+            remat: str = "layer", attn_chunk: int = 1024,
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward. Returns (logits (B,S,V) fp32, aux_loss)."""
+    h = _embed_input(params, batch, cfg, policy, deltas, dtype)
+    h = constrain(h, "act")
+    s = h.shape[1]
+    positions = jnp.arange(s)[None, :]
+    inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
+
+    def body(carry, xs):
+        hh, aux = carry
+        lp, ld = xs
+        hh, a, _ = _layer_forward(lp, ld, hh, cfg, policy, positions, inv_freq,
+                                  attn_chunk)
+        return (hh, aux + a), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    ld = deltas.get("layers") if deltas else None
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                               (params["layers"], ld))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(params, h, cfg, policy, deltas)
+    return logits, aux
+
+
+def _logits(params, h, cfg, policy, deltas):
+    if cfg.tie_embeddings:
+        out = embed_logits(params["embed"], h, policy=policy,
+                           delta=_dget(deltas, "embed", "w"))
+    else:
+        out = quant_dense.apply(params["head"], h, policy=policy, role="output",
+                                delta=_dget(deltas, "head", "w"))
+    return constrain(out.astype(jnp.float32), "logits")
+
+
+# --- serving: prefill + decode ------------------------------------------------------
+
+def cache_len_for(cfg: ModelConfig, max_len: int) -> int:
+    return min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               quantized: bool = False):
+    """KV cache. ``quantized``: int8 entries + per-(layer,batch,position)
+    fp32 scales — the paper's on-chip-quantization principle applied to the
+    decode cache, which dominates decode HBM traffic at long context
+    (beyond-paper, §Perf H-kv8). Scales factor exactly through attention."""
+    s = cache_len_for(cfg, max_len)
+    shape = (cfg.num_layers, batch, s, cfg.num_kv_heads, cfg.head_dim)
+    if quantized:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros((cfg.num_layers, batch, s), jnp.float32),
+                "v_scale": jnp.zeros((cfg.num_layers, batch, s), jnp.float32),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def _quantize_kv(x: jnp.ndarray):
+    """(B, S, KV, D) -> (int8 values, (B, S) scales). Per-token absmax."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=(-2, -1))
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None, None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
+            deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
+            attn_chunk: int = 1024, max_len: Optional[int] = None,
+            quantize_cache: bool = False):
+    """Run the prompt, build the KV cache. Returns (last_logits, cache)."""
+    h = _embed_input(params, batch, cfg, policy, deltas, dtype)
+    s = h.shape[1]
+    max_len = max_len or s
+    cs = cache_len_for(cfg, max_len)
+    positions = jnp.arange(s)[None, :]
+    inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
+
+    def body(hh, xs):
+        lp, ld = xs
+        hh, _, (k, v) = _layer_forward(lp, ld, hh, cfg, policy, positions,
+                                       inv_freq, attn_chunk)
+        # keep last `cs` positions (ring-start for SWA, whole seq otherwise)
+        return hh, (k[:, -cs:], v[:, -cs:])
+
+    ld = deltas.get("layers") if deltas else None
+    h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], ld))
+    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    logits = _logits(params, h, cfg, policy, deltas)
+    if cs > ks.shape[2]:
+        padw = cs - ks.shape[2]
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, padw), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, padw), (0, 0), (0, 0)))
+    elif cfg.sliding_window and s >= cs and s % cs:
+        # ring-buffer invariant: token t lives at slot t % cs. The slice put
+        # token s-cs+i at slot i; roll by s % cs so it sits at (s+i) % cs.
+        ks = jnp.roll(ks, s % cs, axis=2)
+        vs = jnp.roll(vs, s % cs, axis=2)
+    if quantize_cache:
+        qk, sk = jax.vmap(_quantize_kv)(ks)       # over layer dim
+        qv, sv = jax.vmap(_quantize_kv)(vs)
+        cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv,
+                 "len": jnp.asarray(s, jnp.int32)}
+    else:
+        cache = {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                policy: QuantPolicy, deltas: Optional[Dict] = None,
+                dtype=jnp.bfloat16):
+    """One token for the whole batch. tokens: (B, 1) int32.
+
+    Returns (logits (B,1,V), new_cache). The KV cache is a ring buffer for
+    SWA archs (bounded window) and an append buffer otherwise; rope uses the
+    absolute position so ring overwrites stay correct.
+    """
+    b = tokens.shape[0]
+    pos = cache["len"]
+    quantized = "k_scale" in cache
+    h = embed_lookup(params["embed"], tokens, policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    h = constrain(h, "dec_act")
+    inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    cs = cache["k"].shape[2]
+    slot = jnp.mod(pos, cs) if cfg.sliding_window else pos
+
+    def body(hh, xs):
+        if quantized:
+            lp, ld, kc, vc, ks_, vs_ = xs
+        else:
+            lp, ld, kc, vc = xs
+            ks_ = vs_ = None
+        hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+        q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq)
+        if quantized:
+            kq, ksc = _quantize_kv(k)
+            vq, vsc = _quantize_kv(v)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, kq, slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, vq, slot, 1)
+            ks_ = jax.lax.dynamic_update_slice_in_dim(ks_, ksc, slot, 1)
+            vs_ = jax.lax.dynamic_update_slice_in_dim(vs_, vsc, slot, 1)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
+                                                     slot, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
+                                                     slot, 1)
+        valid = jnp.minimum(pos + 1, cs)
+        o = decode_attention(q, kc, vc, jnp.full((b,), valid),
+                             k_scale=ks_, v_scale=vs_)
+        hh = hh + _attn_out(lp, o, cfg, policy, ld, b, 1)
+        hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+        f, _ = _ffn(lp, hn, cfg, policy, ld)
+        out = (hh + f, (kc, vc, ks_, vs_) if quantized else (kc, vc))
+        return out
+
+    ld = deltas.get("layers") if deltas else None
+    if quantized:
+        h, (ks, vs, ksc, vsc) = jax.lax.scan(
+            body, h, (params["layers"], ld, cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": ks, "v": vs, "k_scale": ksc, "v_scale": vsc,
+                     "len": pos + 1}
+    else:
+        h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], ld, cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": ks, "v": vs, "len": pos + 1}
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(params, h, cfg, policy, deltas)
+    return logits, new_cache

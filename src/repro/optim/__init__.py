@@ -1,0 +1,119 @@
+"""Optimizers (pure-JAX, no optax in the container): SGD+momentum — the
+paper's trainer (§2.1: lr 0.1/0.05, momentum 0.9) — and AdamW for the LM zoo.
+Plus LR schedules and global-norm clipping.
+
+API: ``opt = make(name, **hp); state = opt.init(params);
+updates, state = opt.update(grads, state, params, lr)`` — updates are
+*subtracted* by the caller (see training.loop.apply_updates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["make", "sgd", "adamw", "cosine_schedule", "constant_schedule",
+           "warmup_cosine", "clip_by_global_norm", "global_norm", "apply_updates"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]          # (grads, state, params, lr) -> (updates, state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def sgd(momentum: float = 0.9, nesterov: bool = False) -> Optimizer:
+    """The paper's optimizer: SGD with momentum 0.9."""
+
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        mu = jax.tree_util.tree_map(lambda m, g: momentum * m + g,
+                                    state["mu"], grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: lr * (momentum * m + g),
+                                         mu, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: lr * m, mu)
+        return upd, {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, z),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        m = jax.tree_util.tree_map(
+            lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (lr * u).astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init, update)
+
+
+def make(name: str, *, momentum: float = 0.9, weight_decay: float = 0.0,
+         **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(momentum=momentum)
+    if name == "adamw":
+        return adamw(weight_decay=weight_decay, **kw)
+    raise ValueError(f"unknown optimizer {name}")
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p - u).astype(p.dtype),
+                                  params, updates)
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        return lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return fn
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(lr, max(total_steps - warmup, 1), final_frac)
+    def fn(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return fn

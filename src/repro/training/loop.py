@@ -1,0 +1,187 @@
+"""Train-step builder + Trainer driver.
+
+``make_train_step`` returns a pure jit-able function
+``(state, batch) -> (state, metrics)`` implementing:
+
+  * forward under the active QuantPolicy (float / fake-W3A8 / frozen deltas)
+  * MoE aux-loss mixing
+  * microbatched gradient accumulation (``lax.scan`` over microbatches —
+    memory scales with ONE microbatch; mandatory at global_batch 256 x 4k)
+  * global-norm clipping, LR schedule, optimizer update
+  * optional gradient compression (int8 + error feedback, DESIGN §8)
+
+``Trainer`` adds the systems side: double-buffered input, async checkpoints,
+restart-from-latest, and a straggler monitor (per-step wall-time EMA;
+steps > ``straggler_factor`` x EMA are counted and surfaced — on a real
+cluster this feeds the controller that re-shards around slow hosts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim as optim_lib
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.precision import QuantPolicy
+from repro.models import get_model
+from repro.training.losses import IGNORE, accuracy, softmax_xent
+
+__all__ = ["TrainState", "make_loss_fn", "make_train_step", "Trainer"]
+
+AUX_WEIGHT = 0.01
+
+
+def TrainState(params, opt_state, step=0, extra=None) -> Dict[str, Any]:
+    st = {"params": params, "opt": opt_state,
+          "step": jnp.asarray(step, jnp.int32)}
+    if extra:
+        st.update(extra)
+    return st
+
+
+def make_loss_fn(cfg: ModelConfig, policy: QuantPolicy, deltas=None,
+                 dtype=jnp.bfloat16, remat: str = "layer",
+                 attn_chunk: int = 1024, model_kwargs: Optional[Dict] = None):
+    mod = get_model(cfg)
+    mkw = dict(model_kwargs or {})
+    mkw.setdefault("attn_chunk", attn_chunk)
+
+    def loss_fn(params, batch, deltas=deltas):
+        logits, aux = mod.forward(params, batch, cfg, policy=policy,
+                                  deltas=deltas, dtype=dtype, remat=remat,
+                                  **mkw)
+        labels = batch["labels"]
+        if cfg.frontend is not None:
+            pad = jnp.full(labels.shape[:1] + (cfg.frontend_tokens,), IGNORE,
+                           labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        loss = softmax_xent(logits, labels)
+        metrics = {"loss": loss, "aux": aux, "acc": accuracy(logits, labels)}
+        return loss + AUX_WEIGHT * aux, metrics
+
+    return loss_fn
+
+
+def _split_micro(batch, n: int):
+    return jax.tree_util.tree_map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, policy: QuantPolicy,
+                    *, deltas=None, dtype=jnp.bfloat16,
+                    grad_transform: Optional[Callable] = None,
+                    donate: bool = True, model_kwargs: Optional[Dict] = None):
+    """Returns (train_step, init_state_fn)."""
+    opt = optim_lib.make(tcfg.optimizer, momentum=tcfg.momentum,
+                         weight_decay=tcfg.weight_decay)
+    sched = optim_lib.warmup_cosine(tcfg.learning_rate, tcfg.warmup_steps,
+                                    tcfg.total_steps)
+    loss_fn = make_loss_fn(cfg, policy, deltas, dtype, tcfg.remat,
+                           model_kwargs=model_kwargs)
+
+    def init_state(params, extra=None):
+        return TrainState(params, opt.init(params), extra=extra)
+
+    def train_step(state, batch):
+        params = state["params"]
+        dlt = state.get("deltas")   # frozen step sizes (paper step-2 output)
+
+        if tcfg.microbatches > 1:
+            micro = _split_micro(batch, tcfg.microbatches)
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, dlt)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                m_acc = jax.tree_util.tree_map(jnp.add, m_acc, m)
+                return (g_acc, m_acc), None
+
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"loss": jnp.zeros((), jnp.float32),
+                       "aux": jnp.zeros((), jnp.float32),
+                       "acc": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (zeros_g, zeros_m), micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / tcfg.microbatches, grads)
+            metrics = jax.tree_util.tree_map(
+                lambda m: m / tcfg.microbatches, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, dlt)
+
+        if grad_transform is not None:
+            grads, state = grad_transform(grads, state)
+        grads, gnorm = optim_lib.clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = sched(state["step"])
+        updates, opt_state = opt.update(grads, state["opt"], params, lr)
+        params = optim_lib.apply_updates(params, updates)
+        new_state = dict(state)
+        new_state.update(params=params, opt=opt_state, step=state["step"] + 1)
+        metrics = dict(metrics, gnorm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step, init_state
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Wall-time EMA; counts steps slower than factor x EMA."""
+    factor: float = 2.0
+    ema: float = 0.0
+    beta: float = 0.9
+    slow_steps: int = 0
+    total_steps: int = 0
+
+    def record(self, dt: float) -> bool:
+        self.total_steps += 1
+        slow = self.ema > 0 and dt > self.factor * self.ema
+        if slow:
+            self.slow_steps += 1
+            # don't pollute the EMA with the straggler itself
+        else:
+            self.ema = dt if self.ema == 0 else \
+                self.beta * self.ema + (1 - self.beta) * dt
+        return slow
+
+
+class Trainer:
+    """Drives train_step over a loader with checkpoint/restart."""
+
+    def __init__(self, train_step, state, *, checkpointer=None,
+                 ckpt_every: int = 0, log_every: int = 10,
+                 straggler_factor: float = 2.0):
+        self.train_step = train_step
+        self.state = state
+        self.checkpointer = checkpointer
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.monitor = StragglerMonitor(factor=straggler_factor)
+        self.history = []
+
+    def run(self, loader, num_steps: int, *, on_log=None):
+        it = iter(loader)
+        for i in range(num_steps):
+            batch = next(it)
+            t0 = time.perf_counter()
+            self.state, metrics = self.train_step(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.record(dt)
+            step = int(self.state["step"])
+            if self.log_every and (i % self.log_every == 0 or i == num_steps - 1):
+                row = {k: float(v) for k, v in metrics.items()}
+                row.update(step=step, dt=dt)
+                self.history.append(row)
+                if on_log:
+                    on_log(row)
+            if self.checkpointer and self.ckpt_every and step % self.ckpt_every == 0:
+                self.checkpointer.save_async(step, self.state)
+        if self.checkpointer:
+            self.checkpointer.wait()
+        return self.state

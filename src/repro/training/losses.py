@@ -1,0 +1,26 @@
+"""Losses and metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_xent", "accuracy"]
+
+IGNORE = -1
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray):
+    """Mean token NLL over labels != IGNORE. logits (..., V) fp32."""
+    logits = logits.astype(jnp.float32)
+    valid = labels != IGNORE
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - ll) * valid
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray):
+    valid = labels != IGNORE
+    pred = jnp.argmax(logits, axis=-1)
+    return jnp.sum((pred == labels) * valid) / jnp.maximum(jnp.sum(valid), 1)

@@ -1,0 +1,42 @@
+"""Data substrate: determinism (the elastic-restart property) + task stats."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import ClassificationTask, digit_task, lm_batch
+
+
+def test_lm_batch_deterministic():
+    a = lm_batch(jnp.asarray(0), jnp.asarray(7), batch=4, seq=16, vocab=64)
+    b = lm_batch(jnp.asarray(0), jnp.asarray(7), batch=4, seq=16, vocab=64)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = lm_batch(jnp.asarray(0), jnp.asarray(8), batch=4, seq=16, vocab=64)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_lm_batch_is_learnable_shifted_stream():
+    d = lm_batch(jnp.asarray(0), jnp.asarray(0), batch=2, seq=32, vocab=64)
+    # labels are the next-token stream of tokens
+    np.testing.assert_array_equal(np.asarray(d["tokens"][:, 1:]),
+                                  np.asarray(d["labels"][:, :-1]))
+
+
+def test_classification_task_paper_stats():
+    t = digit_task(n_train=500, n_test=200)
+    x, y = t.train
+    assert x.shape == (500, 784) and x.min() >= 0.0 and x.max() <= 1.0
+    assert set(np.unique(y)).issubset(set(range(10)))
+    # deterministic across constructions
+    t2 = digit_task(n_train=500, n_test=200)
+    np.testing.assert_array_equal(t.train[0], t2.train[0])
+
+
+def test_task_difficulty_scales_with_noise():
+    easy = ClassificationTask(128, 5, noise=0.1, n_train=300, n_test=300)
+    hard = ClassificationTask(128, 5, noise=3.0, n_train=300, n_test=300)
+
+    def np_err(t):
+        x, y = t.test
+        d = ((x[:, None, :] - t.prototypes[None]) ** 2).sum(-1)
+        return (d.argmin(1) != y).mean()
+
+    assert np_err(easy) < np_err(hard)

@@ -1,0 +1,55 @@
+"""Property tests for the sub-byte container format (the paper's BRAM image)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.quantizer import max_level
+
+
+class TestFieldsPerWord:
+    def test_paper_density(self):
+        # 10 x 3-bit weights per 32-bit word — 2.5 weights/byte
+        assert packing.fields_per_word(3) == 10
+        assert packing.fields_per_word(2) == 16
+        assert packing.fields_per_word(4) == 8
+        assert packing.fields_per_word(8) == 4
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.sampled_from([2, 3, 4, 8]), st.integers(1, 700),
+       st.integers(0, 2**31 - 1))
+def test_roundtrip_property(bits, n, seed):
+    m = max_level(bits)
+    q = jax.random.randint(jax.random.PRNGKey(seed), (n,), -m, m + 1,
+                           dtype=jnp.int32).astype(jnp.int8)
+    words = packing.pack_int32(q, bits)
+    assert words.shape[0] == packing.packed_words(n, bits)
+    back = packing.unpack_int32(words, n, bits)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 65), st.integers(1, 17), st.integers(0, 2**31 - 1))
+def test_matrix_roundtrip_property(k, n, seed):
+    q = jax.random.randint(jax.random.PRNGKey(seed), (k, n), -3, 4,
+                           dtype=jnp.int32).astype(jnp.int8)
+    words = packing.pack_matrix(q, 3)
+    back = packing.unpack_matrix(words, k, 3)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_negative_min_level():
+    """Full two's-complement range including -(2^(b-1)) packs fine."""
+    q = jnp.array([-4, -3, 3, 0, -4, 1, 2, -1, -2, 3, -4], jnp.int8)
+    back = packing.unpack_int32(packing.pack_int32(q, 3), q.shape[0], 3)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+def test_packed_nbytes_compression():
+    # 3M weights (paper digit net): packed ~1.2MB vs 11.6MB float32
+    n = 2_903_512
+    packed = packing.packed_nbytes((n,), 3)
+    assert packed < n * 4 / 9      # >9x smaller than fp32
+    assert packed >= n * 3 / 8 * 0.9

@@ -1,0 +1,62 @@
+"""STE retraining semantics (paper step 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import qat
+from repro.core.quantizer import QuantSpec
+
+
+def test_ste_gradient_is_identity_in_range():
+    spec = QuantSpec(bits=3)
+    w = jnp.linspace(-0.5, 0.5, 31)
+    delta = jnp.asarray(0.3)
+
+    g = jax.grad(lambda x: jnp.sum(qat.fake_quant(x, spec, delta)))(w)
+    # inside the clip range the STE passes gradient 1 (round is transparent)
+    inside = jnp.abs(w / delta) < 3
+    np.testing.assert_allclose(np.asarray(g[inside]), 1.0, atol=1e-6)
+
+
+def test_fake_quant_forward_is_quantized():
+    spec = QuantSpec(bits=3)
+    w = jax.random.normal(jax.random.PRNGKey(0), (256,)) * 0.2
+    wq = qat.fake_quant(w, spec)
+    # forward values lie on the 7-level grid {-3..3} x delta
+    assert len(jnp.unique(wq)) <= 7
+
+
+def test_fake_quant_act_unsigned_range():
+    x = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(0), (512,)))
+    xq = qat.fake_quant_act(x, 8, signed=False)
+    assert float(jnp.min(xq)) >= 0.0
+    assert len(np.unique(np.asarray(xq))) <= 256
+    np.testing.assert_allclose(np.asarray(xq), np.asarray(x), atol=1 / 255 + 1e-6)
+
+
+def test_fake_quant_act_signed():
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,))
+    xq = qat.fake_quant_act(x, 8, signed=True)
+    scale = float(jnp.max(jnp.abs(x))) / 127
+    np.testing.assert_allclose(np.asarray(xq), np.asarray(x), atol=scale + 1e-6)
+
+
+def test_three_step_pipeline_order():
+    calls = []
+
+    def ft(p):
+        calls.append("float")
+        return p, {"m": 1}
+
+    def qt(p):
+        calls.append("quant")
+        return {"d": 1}
+
+    def rt(p, d):
+        calls.append("retrain")
+        assert d == {"d": 1}
+        return p, {"m": 2}
+
+    res = qat.three_step_pipeline({"w": 0}, ft, qt, rt)
+    assert calls == ["float", "quant", "retrain"]
+    assert res.retrain_metrics == {"m": 2}

@@ -1,0 +1,79 @@
+"""Unit + property tests for the optimal uniform quantizer (paper step 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizer as qz
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestMaxLevel:
+    def test_paper_levels(self):
+        assert qz.max_level(3) == 3           # paper: -3..3
+        assert qz.max_level(2) == 1           # ternary (ref [14])
+        assert qz.max_level(8) == 127
+
+    def test_rejects_1bit(self):
+        with pytest.raises(ValueError):
+            qz.max_level(1)
+
+
+class TestOptimalDelta:
+    def test_beats_naive_absmax(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (4096,)) * 0.2
+        spec = qz.QuantSpec(bits=3)
+        mse_opt = float(qz.quantization_mse(w, spec))
+        d_naive = jnp.max(jnp.abs(w)) / 3
+        q = jnp.clip(jnp.round(w / d_naive), -3, 3)
+        mse_naive = float(jnp.mean((w - q * d_naive) ** 2))
+        assert mse_opt <= mse_naive + 1e-12
+
+    def test_exact_on_grid(self):
+        """Weights already on a 3-bit grid quantize losslessly."""
+        delta = 0.37
+        q_true = jnp.array([-3, -2, -1, 0, 1, 2, 3, 1, -1, 2], jnp.float32)
+        w = q_true * delta
+        spec = qz.QuantSpec(bits=3)
+        q, d = qz.quantize(w, spec)
+        np.testing.assert_allclose(
+            np.asarray(qz.dequantize(q, d, spec)), np.asarray(w), rtol=1e-5)
+
+    def test_per_channel(self):
+        key = jax.random.PRNGKey(1)
+        w = jax.random.normal(key, (64, 8)) * jnp.linspace(0.01, 1.0, 8)
+        spec_pc = qz.QuantSpec(bits=3, per_channel=-1)
+        spec_pt = qz.QuantSpec(bits=3)
+        assert qz.optimal_uniform_delta(w, spec_pc).shape == (8,)
+        assert float(qz.quantization_mse(w, spec_pc)) <= \
+            float(qz.quantization_mse(w, spec_pt)) + 1e-12
+
+    def test_all_zero_weights(self):
+        w = jnp.zeros((128,))
+        q, d = qz.quantize(w, qz.QuantSpec(bits=3))
+        assert np.all(np.asarray(q) == 0)
+        assert np.isfinite(float(d))
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 8), st.integers(0, 2**31 - 1), st.floats(0.01, 10.0))
+    def test_levels_in_range_property(self, bits, seed, scale):
+        w = jax.random.normal(jax.random.PRNGKey(seed), (257,)) * scale
+        spec = qz.QuantSpec(bits=bits)
+        q, d = qz.quantize(w, spec)
+        m = qz.max_level(bits)
+        assert int(jnp.max(q)) <= m and int(jnp.min(q)) >= -m
+        assert float(d) > 0
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1))
+    def test_idempotent_property(self, seed):
+        """quantize(dequantize(quantize(w))) is a fixed point."""
+        w = jax.random.normal(jax.random.PRNGKey(seed), (512,)) * 0.3
+        spec = qz.QuantSpec(bits=3)
+        q1, d1 = qz.quantize(w, spec)
+        w1 = qz.dequantize(q1, d1, spec)
+        q2, d2 = qz.quantize(w1, spec)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2))
+        np.testing.assert_allclose(float(d1), float(d2), rtol=1e-4)

@@ -1,0 +1,176 @@
+"""Training substrate: loss decreases, microbatch equivalence, checkpoint
+restart, optimizer math, straggler monitor."""
+import os
+import tempfile
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt_lib
+from repro import optim as optim_lib
+from repro.configs import TrainConfig, get_config, reduced
+from repro.core.precision import FLOAT, W3A8
+from repro.data.pipeline import HostLoader, prefetch
+from repro.data.synthetic import lm_batch
+from repro.models import get_model
+from repro.training.loop import StragglerMonitor, Trainer, make_train_step
+
+
+def _tiny():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=32, vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _loader(cfg, batch=8, seq=16):
+    return HostLoader(lambda seed, step: lm_batch(
+        jnp.asarray(seed), jnp.asarray(step), batch=batch, seq=seq,
+        vocab=cfg.vocab_size))
+
+
+def test_loss_decreases():
+    cfg, params = _tiny()
+    tcfg = TrainConfig(learning_rate=3e-3, total_steps=40, warmup_steps=4)
+    step, init_state = make_train_step(cfg, tcfg, FLOAT, dtype=jnp.float32)
+    step = jax.jit(step)
+    state = init_state(params)
+    it = iter(_loader(cfg))
+    losses = []
+    for _ in range(40):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3
+
+
+def test_qat_trains_without_nan():
+    cfg, params = _tiny()
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=10, warmup_steps=2)
+    step, init_state = make_train_step(cfg, tcfg, W3A8, dtype=jnp.float32)
+    step = jax.jit(step)
+    state = init_state(params)
+    it = iter(_loader(cfg))
+    for _ in range(5):
+        state, m = step(state, next(it))
+        assert jnp.isfinite(m["loss"])
+
+
+def test_microbatch_equivalence():
+    """2 microbatches == 1 big batch (same grads up to fp tolerance)."""
+    cfg, params = _tiny()
+    batch = next(iter(_loader(cfg, batch=8)))
+    out = {}
+    for n in (1, 2):
+        tcfg = TrainConfig(learning_rate=1e-2, microbatches=n,
+                           total_steps=10, warmup_steps=0)
+        step, init_state = make_train_step(cfg, tcfg, FLOAT, dtype=jnp.float32)
+        state, m = jax.jit(step)(init_state(params), batch)
+        out[n] = (jax.flatten_util.ravel_pytree(state["params"])[0],
+                  float(m["loss"]))
+    np.testing.assert_allclose(out[1][1], out[2][1], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1][0]), np.asarray(out[2][0]),
+                               rtol=2e-4, atol=2e-6)
+
+
+def test_checkpoint_restart_bitexact():
+    """Kill-and-restart: trainer resumed from step k matches uninterrupted."""
+    cfg, params = _tiny()
+    tcfg = TrainConfig(learning_rate=1e-3, total_steps=20, warmup_steps=0)
+    step, init_state = make_train_step(cfg, tcfg, FLOAT, dtype=jnp.float32)
+    step = jax.jit(step)
+
+    def run(state, loader, n):
+        it = iter(loader)
+        for _ in range(n):
+            state, _ = step(state, next(it))
+        return state
+
+    # uninterrupted 10 steps
+    s_full = run(init_state(params), _loader(cfg), 10)
+    with tempfile.TemporaryDirectory() as td:
+        s5 = run(init_state(params), _loader(cfg), 5)
+        ckpt_lib.save(td, 5, s5)
+        tree, meta = ckpt_lib.restore(td)
+        s_resumed = jax.tree_util.tree_map(jnp.asarray, tree)
+        loader = HostLoader(lambda seed, step_: lm_batch(
+            jnp.asarray(seed), jnp.asarray(step_), batch=8, seq=16,
+            vocab=cfg.vocab_size), start_step=5)
+        s_resumed = run(s_resumed, loader, 5)
+    a = jax.flatten_util.ravel_pytree(s_full["params"])[0]
+    b = jax.flatten_util.ravel_pytree(s_resumed["params"])[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_checkpoint_keep_k_and_atomicity():
+    with tempfile.TemporaryDirectory() as td:
+        for s in (1, 2, 3, 4):
+            ckpt_lib.save(td, s, {"x": jnp.ones((3,)) * s}, keep=2)
+        assert ckpt_lib.all_steps(td) == [3, 4]
+        # a stale tmp dir must be ignored by restore
+        os.makedirs(os.path.join(td, "step_000000000099.tmp"))
+        assert ckpt_lib.latest_step(td) == 4
+        tree, meta = ckpt_lib.restore(td)
+        np.testing.assert_allclose(np.asarray(tree["x"]), 4.0)
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as td:
+        ck = ckpt_lib.Checkpointer(td, keep=3)
+        ck.save_async(1, {"w": jnp.arange(4.0)})
+        ck.wait()
+        tree, _ = ckpt_lib.restore(td, 1)
+        np.testing.assert_allclose(np.asarray(tree["w"]), np.arange(4.0))
+
+
+def test_sgd_momentum_matches_paper_form():
+    """mu <- 0.9 mu + g ; p <- p - lr mu."""
+    opt = optim_lib.sgd(momentum=0.9)
+    p = {"w": jnp.ones((2,))}
+    st = opt.init(p)
+    g = {"w": jnp.full((2,), 2.0)}
+    up1, st = opt.update(g, st, p, 0.1)
+    np.testing.assert_allclose(np.asarray(up1["w"]), 0.2)
+    up2, st = opt.update(g, st, p, 0.1)
+    np.testing.assert_allclose(np.asarray(up2["w"]), 0.1 * (0.9 * 2 + 2))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((9,), 4.0)}
+    clipped, norm = optim_lib.clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(4 * 9 + 9 * 16))
+    n2 = optim_lib.global_norm(clipped)
+    assert float(n2) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_schedule():
+    sched = optim_lib.warmup_cosine(1.0, warmup=10, total_steps=110)
+    assert float(sched(0)) == 0.0
+    assert float(sched(10)) == pytest.approx(1.0)
+    assert float(sched(5)) == pytest.approx(0.5)
+    assert float(sched(110)) < 0.2
+
+
+def test_prefetch_preserves_order_and_errors():
+    assert list(prefetch(iter(range(10)), 3)) == list(range(10))
+
+    def bad():
+        yield 1
+        raise RuntimeError("boom")
+
+    it = prefetch(bad(), 2)
+    assert next(it) == 1
+    with pytest.raises(RuntimeError):
+        list(it)
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(factor=2.0)
+    for _ in range(10):
+        m.record(0.1)
+    assert not m.record(0.15)
+    assert m.record(0.5)       # 5x EMA -> straggler
+    assert m.slow_steps == 1
+    # straggler did not pollute the EMA
+    assert m.ema == pytest.approx(0.1, rel=0.2)

@@ -1,0 +1,132 @@
+"""Serving throughput vs slot count: the paper's weight-streaming
+amortization curve, measured.
+
+The paper's Fig. 4 dataflow streams quantized weights once per step
+regardless of batch size, so tokens/sec should rise near-linearly with the
+number of co-resident decode slots until compute saturates. This benchmark
+drives the batched continuous-batching engine over a fixed request set at
+several slot counts and reports tokens/sec per weight form (float ``w``,
+int8 levels ``q``, packed 3-bit containers ``qp`` — the deployed form, where
+the per-tick cost is dominated by the batch-independent container unpack and
+the amortization is strongest).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py
+    PYTHONPATH=src python benchmarks/serving_bench.py --check   # CI gate
+
+Runs on CPU in a couple of minutes at the default reduced size.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.precision import FLOAT, W3A8
+from repro.models import get_model
+from repro.serving.engine import ServingEngine
+
+PROMPT = [1, 2, 3, 4, 5, 6, 7, 8]
+
+
+def _engine(params, cfg, policy, slots, max_new):
+    return ServingEngine(params, cfg, policy=policy, slots=slots,
+                         max_len=len(PROMPT) + max_new + 1,
+                         dtype=jnp.float32)
+
+
+def bench_form(params, cfg, policy, *, slots: int, requests: int,
+               max_new: int, repeats: int = 3) -> dict:
+    # warmup on the SAME engine instance that gets timed: the jitted
+    # prefill/tick closures are per-engine, so a throwaway warmup engine
+    # would leave the timed run paying compile time
+    eng = _engine(params, cfg, policy, slots, max_new)
+    eng.submit(PROMPT, max_new=max_new)
+    eng.run_all()
+
+    # best-of-N: CPU wall-clock noise (scheduler, allocator) easily exceeds
+    # the 4->8-slot amortization step on sub-second runs; min time is the
+    # standard denoiser
+    best = None
+    for _ in range(repeats):
+        ticks0 = eng.decode_calls
+        for _ in range(requests):
+            eng.submit(PROMPT, max_new=max_new)
+        t0 = time.perf_counter()
+        done = eng.run_all()
+        dt = time.perf_counter() - t0
+        toks = sum(len(r.out) for r in done)
+        r = {"slots": slots, "tokens": toks, "secs": dt,
+             "tok_per_sec": toks / dt, "ticks": eng.decode_calls - ticks0}
+        if best is None or r["tok_per_sec"] > best["tok_per_sec"]:
+            best = r
+    return best
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--slots", default="1,4,8,16",
+                    help="comma-separated slot counts to sweep")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--forms", default="qp,q,w")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repetitions per config; best run reported")
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless qp tokens/sec is monotonically "
+                         "increasing from 1 to 8 slots")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch), layers=args.layers,
+                  d_model=args.d_model, vocab=args.vocab)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    W3 = dataclasses.replace(W3A8, act_bits=None)
+    form_params = {
+        "w": (params, FLOAT),
+        "q": (quant_dense.export_levels(params, W3), W3),
+        "qp": (quant_dense.export_container(params, W3), W3),
+    }
+    slot_counts = [int(s) for s in args.slots.split(",")]
+
+    results: dict = {}
+    print(f"{cfg.name} reduced(L={args.layers}, d={args.d_model}, "
+          f"V={args.vocab}), {args.requests} requests x {args.max_new} tokens")
+    print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
+          f"{'secs':>7} {'tok/s':>8}")
+    for form in args.forms.split(","):
+        p, pol = form_params[form]
+        results[form] = []
+        for slots in slot_counts:
+            r = bench_form(p, cfg, pol, slots=slots, requests=args.requests,
+                           max_new=args.max_new, repeats=args.repeats)
+            results[form].append(r)
+            print(f"{form:>4} {r['slots']:>5} {r['tokens']:>7} "
+                  f"{r['ticks']:>6} {r['secs']:>7.2f} {r['tok_per_sec']:>8.1f}")
+
+    pts = [(r["slots"], r["tok_per_sec"]) for r in results.get("qp", ())
+           if r["slots"] in (1, 4, 8)]
+    ok = all(a[1] < b[1] for a, b in zip(pts, pts[1:]))
+    if pts:
+        print(f"qp amortization monotonic over slots "
+              f"{'/'.join(str(s) for s, _ in pts)}: {ok} "
+              f"({' -> '.join(f'{x:.1f}' for _, x in pts)} tok/s)")
+    if args.check:
+        # the gate must never pass vacuously: it needs the full qp 1/4/8 curve
+        if {s for s, _ in pts} != {1, 4, 8}:
+            raise SystemExit("--check needs form qp and slots 1,4,8 in the "
+                             "sweep (got qp points for "
+                             f"{sorted(s for s, _ in pts)})")
+        if not ok:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

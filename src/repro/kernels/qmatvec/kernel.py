@@ -22,6 +22,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed across jax releases (TPUCompilerParams <= 0.4.x < CompilerParams)
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 __all__ = ["qmatvec_pallas", "FIELDS"]
 
 FIELDS = 10  # 3-bit fields per int32 container word
@@ -95,7 +98,7 @@ def qmatvec_pallas(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray,
         out_specs=pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
         out_shape=jax.ShapeDtypeStruct((b, npad), out_dtype),
         scratch_shapes=[pltpu.VMEM((b, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed, delta)

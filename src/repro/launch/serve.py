@@ -1,7 +1,8 @@
-"""Serving launcher: quantize-and-serve any assigned arch.
+"""Serving launcher: quantize-and-serve any assigned arch through the batched
+continuous-batching engine (one jitted decode per tick, all slots at once).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
-        --requests 8 --max-new 16
+        --requests 8 --slots 4 --max-new 16
 """
 from __future__ import annotations
 
@@ -23,9 +24,14 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--quant", default="w3", choices=["float", "w3"])
+    ap.add_argument("--form", default="qp", choices=["w", "q", "qp"],
+                    help="weight form for --quant w3: levels (q) or packed "
+                         "containers (qp, the paper's BRAM image)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -33,13 +39,17 @@ def main():
         cfg = reduced(cfg)
     params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
     if args.quant == "w3":
-        params = quant_dense.export_container(params, W3A8)
+        export = {"q": quant_dense.export_levels,
+                  "qp": quant_dense.export_container}.get(args.form)
+        if export:
+            params = export(params, W3A8)
         policy = W3A8
     else:
         policy = FLOAT
 
     eng = ServingEngine(params, cfg, policy=policy, slots=args.slots,
-                        max_len=64 + args.max_new)
+                        max_len=64 + args.max_new,
+                        temperature=args.temperature, eos_id=args.eos_id)
     t0 = time.time()
     for i in range(args.requests):
         eng.submit([1 + i, 2, 3, 4 + i], max_new=args.max_new)
@@ -47,7 +57,9 @@ def main():
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s on CPU)")
+          f"({toks / dt:.1f} tok/s on CPU), "
+          f"{eng.decode_calls} batched decode ticks "
+          f"({toks / max(eng.decode_calls, 1):.2f} tok/tick)")
 
 
 if __name__ == "__main__":

@@ -1,3 +1,5 @@
-from repro.models.api import get_model, init_cache
+from repro.models.api import (decode_step, get_model, init_cache,
+                              insert_prefill, prefill)
 
-__all__ = ["get_model", "init_cache"]
+__all__ = ["get_model", "init_cache", "prefill", "decode_step",
+           "insert_prefill"]

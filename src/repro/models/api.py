@@ -5,7 +5,16 @@ Every module exposes:
     forward(params, batch, cfg, *, policy, deltas, ...) -> (logits, aux)
     prefill(params, batch, cfg, *, policy, ...)         -> (logits, cache)
     decode_step(params, cache, tokens, cfg, *, policy)  -> (logits, cache)
+    insert_prefill(cache, slot, src)                    -> cache
     init_cache/init_state(cfg, batch, max_len, ...)     -> cache
+
+``decode_step`` is batched: ``cache["len"]`` may be a scalar (uniform batch,
+e.g. ``generate``) or a (B,) vector of per-row lengths, in which case every
+batch row is an independent request at its own position — the slot-major
+layout the continuous-batching engine uses. ``insert_prefill`` copies a
+single-request prefill cache into one slot of such a shared cache; the
+module-level helper here additionally takes ``cfg`` first to dispatch:
+``insert_prefill(cfg, cache, slot, src)``.
 """
 from __future__ import annotations
 
@@ -14,7 +23,8 @@ from types import ModuleType
 from repro.configs.base import ModelConfig
 from repro.models import hybrid, mamba2, transformer
 
-__all__ = ["get_model", "init_cache"]
+__all__ = ["get_model", "init_cache", "prefill", "decode_step",
+           "insert_prefill"]
 
 _FAMILY_MODULE = {
     "dense": transformer, "audio": transformer, "vlm": transformer,
@@ -28,11 +38,31 @@ def get_model(cfg: ModelConfig) -> ModuleType:
     return _FAMILY_MODULE[cfg.family]
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
+               per_slot_len: bool = False):
+    """Decode cache/state for ``batch`` rows. With ``per_slot_len`` the
+    ``len`` entry is a (batch,) int32 vector — one length per slot — which is
+    what the batched ``decode_step`` path and ``insert_prefill`` expect."""
     import jax.numpy as jnp
 
     dtype = dtype or jnp.bfloat16
     mod = get_model(cfg)
     if cfg.family == "ssm":
-        return mod.init_state(cfg, batch, max_len, dtype)
-    return mod.init_cache(cfg, batch, max_len, dtype)
+        cache = mod.init_state(cfg, batch, max_len, dtype)
+    else:
+        cache = mod.init_cache(cfg, batch, max_len, dtype)
+    if per_slot_len:
+        cache["len"] = jnp.zeros((batch,), jnp.int32)
+    return cache
+
+
+def prefill(params, batch, cfg: ModelConfig, **kw):
+    return get_model(cfg).prefill(params, batch, cfg, **kw)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, **kw):
+    return get_model(cfg).decode_step(params, cache, tokens, cfg, **kw)
+
+
+def insert_prefill(cfg: ModelConfig, cache, slot, src):
+    return get_model(cfg).insert_prefill(cache, slot, src)

@@ -20,7 +20,8 @@ from repro.distributed.context import constrain
 from repro.models import mamba2, transformer
 from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
 
-__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
+           "insert_prefill"]
 
 
 def _counts(cfg: ModelConfig) -> Tuple[int, int]:
@@ -178,13 +179,16 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
 def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
                 policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16):
+    """One token for the whole batch. ``state["len"]`` may be scalar (uniform
+    batch) or (B,) per-row lengths (slot-major continuous batching)."""
     n_groups, n_tail = _counts(cfg)
     b = tokens.shape[0]
-    pos = state["len"]
+    pos = jnp.broadcast_to(state["len"], (b,)).astype(jnp.int32)   # (B,)
     h = embed_lookup(params["embed"], tokens, policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
     inv_freq = transformer.rope_freqs(cfg.head_dim, cfg.rope_theta)
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    positions = pos[:, None]                                       # (B, 1)
+    rows = jnp.arange(b)
     shared, sdelta = params["shared"], _dget(deltas, "shared")
 
     def mamba_body(hh, xs):
@@ -198,10 +202,10 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
         hn = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
         q, k, v = transformer._qkv(shared, hn, cfg, policy, sdelta, positions,
                                    inv_freq)
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, 1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, 1)
+        kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
         from repro.models.attention import decode_attention
-        o = decode_attention(q, kc, vc, jnp.full((b,), pos + 1))
+        o = decode_attention(q, kc, vc, pos + 1)
         hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, 1)
         hn = rmsnorm(shared["ln2"], hh, cfg.norm_eps)
         f, _ = transformer._ffn(shared, hn, cfg, policy, sdelta)
@@ -218,6 +222,29 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
         h, tstates = jax.lax.scan(
             mamba_body, h, (params["tail"], _dget(deltas, "tail"), state["tail"]))
         new_state["tail"] = tstates
-    new_state["len"] = pos + 1
+    new_state["len"] = state["len"] + 1
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     return _logits(params, h, cfg, policy, deltas), new_state
+
+
+def insert_prefill(state, slot, src):
+    """Copy a single-request prefill state (batch=1, same max_len) into row
+    ``slot`` of a slot-major shared state whose ``len`` is per-slot (slots,).
+    Batch axes: ``groups`` leaves (G, A, B, ...) -> 2; ``kv``/``tail`` -> 1.
+    ``slot`` may be traced."""
+    def ins(dst, s, axis):
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, s.astype(dst.dtype), slot, axis)
+
+    out = dict(state)
+    out["groups"] = jax.tree_util.tree_map(
+        lambda dst, s: ins(dst, s, 2), state["groups"], src["groups"])
+    out["kv"] = jax.tree_util.tree_map(
+        lambda dst, s: ins(dst, s, 1), state["kv"], src["kv"])
+    if "tail" in state:
+        out["tail"] = jax.tree_util.tree_map(
+            lambda dst, s: ins(dst, s, 1), state["tail"], src["tail"])
+    out["len"] = jax.lax.dynamic_update_slice(
+        state["len"], jnp.reshape(src["len"], (1,)).astype(state["len"].dtype),
+        (slot,))
+    return out

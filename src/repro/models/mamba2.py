@@ -24,8 +24,8 @@ from repro.core.precision import QuantPolicy
 from repro.distributed.context import constrain
 from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
 
-__all__ = ["init", "forward", "init_state", "decode_step", "block_init",
-           "block_apply", "block_decode", "DEFAULT_CHUNK"]
+__all__ = ["init", "forward", "init_state", "decode_step", "insert_prefill",
+           "block_init", "block_apply", "block_decode", "DEFAULT_CHUNK"]
 
 DEFAULT_CHUNK = 256
 
@@ -380,3 +380,17 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, h, cfg, policy, deltas)
     return logits, {"layers": new_layers, "len": state["len"] + 1}
+
+
+def insert_prefill(state, slot, src):
+    """Copy a single-request prefill state (batch=1) into row ``slot`` of a
+    slot-major shared state whose ``len`` is per-slot (slots,). ``slot`` may
+    be traced. Every layer leaf is (L, B, ...): batch axis 1."""
+    layers = jax.tree_util.tree_map(
+        lambda dst, s: jax.lax.dynamic_update_slice_in_dim(
+            dst, s.astype(dst.dtype), slot, 1),
+        state["layers"], src["layers"])
+    ln = jax.lax.dynamic_update_slice(
+        state["len"], jnp.reshape(src["len"], (1,)).astype(state["len"].dtype),
+        (slot,))
+    return {"layers": layers, "len": ln}

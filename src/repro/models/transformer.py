@@ -30,7 +30,8 @@ from repro.models.layers import (apply_rope, embed_init, embed_logits,
                                  embed_lookup, head_rmsnorm, mlp_apply,
                                  mlp_init, rmsnorm, rmsnorm_init, rope_freqs)
 
-__all__ = ["init", "forward", "init_cache", "prefill", "decode_step"]
+__all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
+           "insert_prefill"]
 
 
 # --- init -----------------------------------------------------------------------
@@ -273,17 +274,22 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
     Returns (logits (B,1,V), new_cache). The KV cache is a ring buffer for
     SWA archs (bounded window) and an append buffer otherwise; rope uses the
     absolute position so ring overwrites stay correct.
+
+    ``cache["len"]`` may be a scalar (uniform batch, e.g. ``generate``) or a
+    (B,) vector of per-row lengths (slot-major continuous batching: every row
+    is an independent request at its own position).
     """
     b = tokens.shape[0]
-    pos = cache["len"]
+    pos = jnp.broadcast_to(cache["len"], (b,)).astype(jnp.int32)   # (B,)
     quantized = "k_scale" in cache
     h = embed_lookup(params["embed"], tokens, policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
     h = constrain(h, "dec_act")
     inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
-    positions = jnp.full((1, 1), pos, jnp.int32)
+    positions = pos[:, None]                                       # (B, 1)
     cs = cache["k"].shape[2]
     slot = jnp.mod(pos, cs) if cfg.sliding_window else pos
+    rows = jnp.arange(b)
 
     def body(hh, xs):
         if quantized:
@@ -296,18 +302,15 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
         if quantized:
             kq, ksc = _quantize_kv(k)
             vq, vsc = _quantize_kv(v)
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, kq, slot, 1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, vq, slot, 1)
-            ks_ = jax.lax.dynamic_update_slice_in_dim(ks_, ksc, slot, 1)
-            vs_ = jax.lax.dynamic_update_slice_in_dim(vs_, vsc, slot, 1)
+            kc = kc.at[rows, slot].set(kq[:, 0])
+            vc = vc.at[rows, slot].set(vq[:, 0])
+            ks_ = ks_.at[rows, slot].set(ksc[:, 0])
+            vs_ = vs_.at[rows, slot].set(vsc[:, 0])
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype),
-                                                     slot, 1)
-            vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype),
-                                                     slot, 1)
+            kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
         valid = jnp.minimum(pos + 1, cs)
-        o = decode_attention(q, kc, vc, jnp.full((b,), valid),
-                             k_scale=ks_, v_scale=vs_)
+        o = decode_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_)
         hh = hh + _attn_out(lp, o, cfg, policy, ld, b, 1)
         hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
         f, _ = _ffn(lp, hn, cfg, policy, ld)
@@ -320,11 +323,32 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
             body, h, (params["layers"], ld, cache["k"], cache["v"],
                       cache["k_scale"], cache["v_scale"]))
         new_cache = {"k": ks, "v": vs, "k_scale": ksc, "v_scale": vsc,
-                     "len": pos + 1}
+                     "len": cache["len"] + 1}
     else:
         h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], ld, cache["k"],
                                              cache["v"]))
-        new_cache = {"k": ks, "v": vs, "len": pos + 1}
+        new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, h, cfg, policy, deltas)
     return logits, new_cache
+
+
+def insert_prefill(cache, slot, src):
+    """Copy a single-request prefill cache (batch=1, same max_len) into row
+    ``slot`` of a slot-major shared cache whose ``len`` is per-slot (slots,).
+
+    ``slot`` may be a traced int32 scalar, so one jitted insert serves every
+    slot without recompiling. Purely functional: returns the updated cache.
+    """
+    out = dict(cache)
+    for name in ("k", "v"):
+        out[name] = jax.lax.dynamic_update_slice_in_dim(
+            cache[name], src[name].astype(cache[name].dtype), slot, 1)
+    if "k_scale" in cache:
+        for name in ("k_scale", "v_scale"):
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                cache[name], src[name], slot, 1)
+    out["len"] = jax.lax.dynamic_update_slice(
+        cache["len"], jnp.reshape(src["len"], (1,)).astype(cache["len"].dtype),
+        (slot,))
+    return out

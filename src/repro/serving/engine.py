@@ -1,21 +1,52 @@
-"""Batched serving engine: prefill -> decode loop with greedy/temperature
-sampling, packed-weight option (the paper's deployed form), and a simple
-continuous-batching slot manager for request streams.
+"""Truly batched continuous-batching serving engine.
+
+The paper's throughput argument (Fig. 4 dataflow) is that quantized weights
+are streamed once per step *regardless of batch size*, so batching is what
+amortizes the 3-bit weight traffic. This engine realizes that on the serving
+side:
+
+  * ONE shared slot-major cache — ``(slots, ...)`` batch layout with per-slot
+    length counters — allocated once at construction (all three families:
+    KV cache, SSM state, hybrid group state; all three weight forms: ``w``
+    float, ``q`` levels, ``qp`` packed containers).
+  * Admission: a queued request prefilling into a free slot via the family's
+    ``insert_prefill`` (single jitted insert, slot index traced — no
+    per-slot recompile).
+  * ONE jitted ``decode_step`` per tick advances every active slot at once.
+    Sampling and termination (budget exhausted / EOS) are computed on-device
+    as masks; inactive slots are frozen in-graph (token and length held), so
+    a tick never needs to know on the host which slots are live.
+  * Results are drained asynchronously: each tick appends small device
+    arrays to a pending buffer; tokens only cross to the host in bulk at
+    ``drain()`` — there is no per-token host sync.
+
+When ``eos_id`` is None request lifetimes are host-predictable (exactly
+``max_new`` tokens), so admission needs no sync at all. ``run_all`` drains
+every ``drain_every`` ticks — the async window: larger values sync less
+often but hold more pending per-tick records; with EOS enabled the periodic
+drain is also what discovers early-freed slots.
+
+Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows,
+and dynamic activation scales (``policy.act_bits``) are per-tensor — under
+either, a slot's tokens can depend on what else is in the batch. Dense/ssm/
+hybrid decode with weight-only quantization is row-independent and therefore
+token-identical to single-request ``generate``.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.precision import QuantPolicy
+from repro.models import api as model_api
 from repro.models import get_model
 
-__all__ = ["generate", "ServingEngine"]
+__all__ = ["generate", "Request", "ServingEngine"]
 
 
 def _sample(key, logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
@@ -35,7 +66,13 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
     logits, cache = mod.prefill(params, {"tokens": prompts}, cfg,
                                 policy=policy, deltas=deltas, dtype=dtype,
                                 max_len=max_len)
-    key = jax.random.PRNGKey(seed)
+    # independent streams: k0 samples the prefill token, the rest drive the
+    # scan (sampling with `key` AND scanning over split(key, n) would reuse
+    # the same randomness for tok0 and step 0)
+    k0, key = jax.random.split(jax.random.PRNGKey(seed))
+    tok0 = _sample(k0, logits[:, 0], temperature)[:, None].astype(jnp.int32)
+    if max_new_tokens == 1:
+        return jnp.concatenate([prompts, tok0], axis=1)
 
     @jax.jit
     def step(carry, k):
@@ -45,7 +82,6 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
         nxt = _sample(k, logits[:, 0], temperature)[:, None].astype(jnp.int32)
         return (cache, nxt), nxt
 
-    tok0 = _sample(key, logits[:, 0], temperature)[:, None].astype(jnp.int32)
     (cache, _), toks = jax.lax.scan(step, (cache, tok0),
                                     jax.random.split(key, max_new_tokens - 1))
     out = jnp.concatenate([prompts, tok0, toks[:, :, 0].T], axis=1)
@@ -62,63 +98,204 @@ class Request:
 
 
 class ServingEngine:
-    """Slot-based continuous batching over a fixed decode batch.
+    """Slot-based continuous batching: one jitted decode per tick, all slots.
 
-    Requests join free slots after a (single-request) prefill; every decode
-    step advances all active slots at once — the standard large-scale decode
-    pattern (the batch matmul amortizes the packed-weight streaming, which is
-    exactly the paper's throughput argument: weights are read once per step
-    regardless of batch size).
+    ``step()`` = admit + one batched tick (async — tokens stay on device);
+    ``drain()`` = bulk host transfer of everything emitted since the last
+    drain; ``run_all()`` = drive until queue and slots are empty.
+
+    ``decode_calls`` counts ticks — each is exactly one ``decode_step``
+    invocation regardless of the number of active slots (asserted by
+    tests/test_engine_batched.py).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, policy: QuantPolicy,
                  deltas=None, slots: int = 8, max_len: int = 512,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, temperature: float = 0.0,
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 drain_every: int = 4):
         self.params, self.cfg, self.policy = params, cfg, policy
         self.deltas, self.dtype = deltas, dtype
         self.mod = get_model(cfg)
-        self.slots = slots
-        self.max_len = max_len
-        self.active: Dict[int, Request] = {}
+        self.slots, self.max_len = slots, max_len
+        self.temperature = temperature
+        self.eos_id = eos_id
+        self.drain_every = max(1, drain_every)
+        # shared slot-major cache, allocated ONCE
+        self.cache = model_api.init_cache(cfg, slots, max_len, dtype,
+                                          per_slot_len=True)
+        # per-slot device state
+        self._tokens = jnp.zeros((slots, 1), jnp.int32)    # last emitted token
+        self._active = jnp.zeros((slots,), bool)
+        self._emitted = jnp.zeros((slots,), jnp.int32)     # tokens produced
+        self._budget = jnp.zeros((slots,), jnp.int32)      # per-slot max_new
+        self._key = jax.random.PRNGKey(seed)
+        # host-side bookkeeping
         self.queue: List[Request] = []
+        self._slot_req: List[Optional[Request]] = [None] * slots
+        self._ticks_left = [0] * slots        # deterministic lifetime bound
+        self._pending: List[Tuple] = []       # (toks, emitted_mask, done, owners)
+        self._finished: List[Request] = []    # synced but not yet returned
         self._uid = 0
+        self.decode_calls = 0                 # ticks == decode_step calls
+        # donate the shared cache (argument 2): without donation every tick
+        # and every admission materializes a full second copy of the
+        # slot-major cache. The small per-slot vectors are NOT donated —
+        # pending records hold references to pre-tick `active` arrays.
+        self._tick_fn = jax.jit(self._tick, donate_argnums=(1,))
+        self._admit_fn = jax.jit(self._admit_device, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(self._prefill)
+
+    # --- jitted graph builders (self.mod looked up at trace time so tests can
+    # --- instrument the family module's decode_step) ------------------------
+
+    def _mkw(self) -> Dict[str, Any]:
+        return dict(policy=self.policy, deltas=self.deltas, dtype=self.dtype)
+
+    def _eos(self) -> int:
+        return -1 if self.eos_id is None else int(self.eos_id)  # -1 never hits
+
+    def _prefill(self, params, toks):
+        return self.mod.prefill(params, {"tokens": toks}, self.cfg,
+                                max_len=self.max_len, **self._mkw())
+
+    def _tick(self, params, cache, tokens, active, emitted, budget, key):
+        """Advance every active slot one token. Masks computed on-device."""
+        logits, new_cache = self.mod.decode_step(params, cache, tokens,
+                                                 self.cfg, **self._mkw())
+        nxt = _sample(key, logits[:, 0], self.temperature).astype(jnp.int32)
+        nxt = jnp.where(active, nxt, tokens[:, 0])          # freeze inactive
+        emitted = emitted + active.astype(jnp.int32)
+        done = active & ((emitted >= budget) | (nxt == self._eos()))
+        new_cache["len"] = jnp.where(active, new_cache["len"], cache["len"])
+        return new_cache, nxt[:, None], active & ~done, emitted, done
+
+    def _admit_device(self, params, cache, tokens, active, emitted, budget,
+                      slot, src, logits0, req_budget, key):
+        """Insert a prefilled request into ``slot`` and sample its first
+        token. ``slot``/``req_budget`` traced -> compiles once."""
+        cache = self.mod.insert_prefill(cache, slot, src)
+        t0 = _sample(key, logits0[:, 0], self.temperature).astype(jnp.int32)
+        tokens = jax.lax.dynamic_update_slice(tokens, t0[:, None], (slot, 0))
+        # the prefill sample already counts: a max_new==1 request (or an
+        # immediate EOS) never becomes active
+        act0 = (req_budget > 1) & (t0[0] != self._eos())
+        active = jax.lax.dynamic_update_slice(active, act0[None], (slot,))
+        emitted = jax.lax.dynamic_update_slice(
+            emitted, jnp.ones((1,), jnp.int32), (slot,))
+        budget = jax.lax.dynamic_update_slice(budget, req_budget[None], (slot,))
+        return cache, tokens, active, emitted, budget
+
+    # --- public API ---------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        if max_new < 1:
+            raise ValueError(f"max_new must be >= 1, got {max_new}")
+        if len(prompt) + max_new > self.max_len:
+            raise ValueError(f"prompt+max_new {len(prompt) + max_new} exceeds "
+                             f"engine max_len {self.max_len}")
         self._uid += 1
-        self.queue.append(Request(self._uid, prompt, max_new))
+        self.queue.append(Request(self._uid, list(prompt), max_new))
         return self._uid
 
+    def _free_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if self._slot_req[s] is None]
+
+    def _occupied(self) -> bool:
+        return any(r is not None for r in self._slot_req)
+
     def _spin_up(self):
-        while self.queue and len(self.active) < self.slots:
-            req = self.queue.pop(0)
+        """Admit queued requests into free slots (prefill + slot insert)."""
+        if not self.queue:
+            return
+        free = self._free_slots()
+        if not free and self.eos_id is not None:
+            # an EOS may have freed a slot we haven't observed yet; _sync
+            # keeps the finished requests queued for the next drain()
+            self._sync()
+            free = self._free_slots()
+        while self.queue and free:
+            slot, req = free.pop(0), self.queue.pop(0)
             toks = jnp.asarray([req.prompt], jnp.int32)
-            logits, cache = self.mod.prefill(
-                self.params, {"tokens": toks}, self.cfg, policy=self.policy,
-                deltas=self.deltas, dtype=self.dtype, max_len=self.max_len)
-            nxt = int(jnp.argmax(logits[0, 0]))
-            req.out.append(nxt)
-            slot = min(set(range(self.slots)) - set(self.active), default=None)
-            self.active[slot] = req
-            req._cache = cache            # per-slot cache (single-row batch)
+            logits0, src = self._prefill_fn(self.params, toks)
+            self._key, k = jax.random.split(self._key)
+            (self.cache, self._tokens, self._active, self._emitted,
+             self._budget) = self._admit_fn(
+                self.params, self.cache, self._tokens, self._active,
+                self._emitted, self._budget, jnp.asarray(slot, jnp.int32),
+                src, logits0, jnp.asarray(req.max_new, jnp.int32), k)
+            self._slot_req[slot] = req
+            self._ticks_left[slot] = req.max_new - 1
+            # record the prefill token: emitted by `slot` only; done iff the
+            # request never became active (max_new == 1 or immediate EOS)
+            mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
+            self._pending.append((self._tokens[:, 0], mask,
+                                  mask & ~self._active,
+                                  tuple(self._slot_req)))
+            if self._ticks_left[slot] <= 0:
+                self._slot_req[slot] = None    # lifetime over; drain finishes it
 
     def step(self):
-        """One decode step across all active slots."""
+        """Admit, then advance ALL active slots with ONE jitted decode call.
+
+        Asynchronous: emitted tokens stay on device until ``drain()``.
+        """
         self._spin_up()
-        finished = []
-        for slot, req in list(self.active.items()):
-            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, req._cache = self.mod.decode_step(
-                self.params, req._cache, tok, self.cfg, policy=self.policy,
-                deltas=self.deltas, dtype=self.dtype)
-            req.out.append(int(jnp.argmax(logits[0, 0])))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                finished.append(req)
-                del self.active[slot]
-        return finished
+        if not self._occupied():
+            return
+        emitted_mask = self._active                  # who emits this tick
+        owners = tuple(self._slot_req)
+        self._key, k = jax.random.split(self._key)
+        (self.cache, self._tokens, self._active, self._emitted,
+         done) = self._tick_fn(self.params, self.cache, self._tokens,
+                               self._active, self._emitted, self._budget, k)
+        self.decode_calls += 1
+        self._pending.append((self._tokens[:, 0], emitted_mask, done, owners))
+        for s in range(self.slots):
+            if self._slot_req[s] is not None:
+                self._ticks_left[s] -= 1
+                if self._ticks_left[s] <= 0:
+                    self._slot_req[s] = None     # budget exhausted this tick
+
+    def _sync(self):
+        """Bulk-sync everything emitted since the last sync; attribute
+        tokens to requests via per-tick owner snapshots. Newly finished
+        requests accumulate in ``_finished`` until ``drain()`` hands them
+        out (an internal sync must never lose them)."""
+        if not self._pending:
+            return
+        toks = np.asarray(jnp.stack([p[0] for p in self._pending]))
+        masks = np.asarray(jnp.stack([p[1] for p in self._pending]))
+        dones = np.asarray(jnp.stack([p[2] for p in self._pending]))
+        for t, (_, _, _, owners) in enumerate(self._pending):
+            for s in np.nonzero(masks[t])[0]:
+                req = owners[s]
+                if req is not None:
+                    req.out.append(int(toks[t, s]))
+            for s in np.nonzero(dones[t])[0]:
+                req = owners[s]
+                if req is not None and not req.done:
+                    req.done = True
+                    self._finished.append(req)
+                    if self._slot_req[s] is req:   # early EOS: free the slot
+                        self._slot_req[s] = None
+                        self._ticks_left[s] = 0
+        self._pending.clear()
+
+    def drain(self) -> List[Request]:
+        """Sync pending emissions and return every request that finished
+        since the last ``drain()`` call."""
+        self._sync()
+        out, self._finished = self._finished, []
+        return out
 
     def run_all(self) -> List[Request]:
         done: List[Request] = []
-        while self.queue or self.active:
-            done.extend(self.step())
+        while self.queue or self._occupied():
+            self.step()
+            # periodic drain bounds the pending-buffer growth (one record
+            # per tick) and, with EOS, discovers freed slots early
+            if self.decode_calls % self.drain_every == 0:
+                done.extend(self.drain())
+        done.extend(self.drain())
         return done

@@ -1,0 +1,34 @@
+"""Fallback shims for when ``hypothesis`` is not installed (optional dev dep,
+see requirements-dev.txt).
+
+Property-based tests decorated with the stub ``given`` are skipped with a
+clear reason; plain unit tests in the same module still run. Usage:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from _hypothesis_stub import given, settings, st
+"""
+import pytest
+
+_SKIP = pytest.mark.skip(
+    reason="hypothesis not installed (pip install -r requirements-dev.txt); "
+           "property-based cases skipped")
+
+
+def given(*_args, **_kwargs):
+    return lambda fn: _SKIP(fn)
+
+
+def settings(*_args, **_kwargs):
+    return lambda fn: fn
+
+
+class _Strategies:
+    """Accepts any strategy-construction call at collection time."""
+
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

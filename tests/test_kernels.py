@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:     # optional dev dep; see requirements-dev.txt
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.packing import pack_matrix
 from repro.kernels.qmatmul.ops import qmatmul

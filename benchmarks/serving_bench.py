@@ -1,14 +1,20 @@
 """Serving throughput vs slot count: the paper's weight-streaming
-amortization curve, measured.
+amortization curve, measured — under MIXED-LENGTH traffic.
 
 The paper's Fig. 4 dataflow streams quantized weights once per step
 regardless of batch size, so tokens/sec should rise near-linearly with the
 number of co-resident decode slots until compute saturates. This benchmark
-drives the batched continuous-batching engine over a fixed request set at
-several slot counts and reports tokens/sec per weight form (float ``w``,
-int8 levels ``q``, packed 3-bit containers ``qp`` — the deployed form, where
-the per-tick cost is dominated by the batch-independent container unpack and
-the amortization is strongest).
+drives the batched continuous-batching engine over a fixed mixed-length
+request set (prompts spanning both admission buckets, the heavy-traffic
+shape the bucketed prefill path exists for) at several slot counts and
+reports tokens/sec per weight form (float ``w``, int8 levels ``q``, packed
+3-bit containers ``qp`` — the deployed form, where the per-tick cost is
+dominated by the batch-independent container unpack and the amortization is
+strongest), plus admission throughput: batched ``prefills`` issued and
+prompt tokens/sec (``ptok/s``) absorbed through them.
+
+Results are also written as a JSON artifact (default ``BENCH_serving.json``)
+so CI can archive the perf trajectory.
 
     PYTHONPATH=src python benchmarks/serving_bench.py
     PYTHONPATH=src python benchmarks/serving_bench.py --check   # CI gate
@@ -19,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import jax
@@ -30,12 +37,20 @@ from repro.core.precision import FLOAT, W3A8
 from repro.models import get_model
 from repro.serving.engine import ServingEngine
 
-PROMPT = [1, 2, 3, 4, 5, 6, 7, 8]
+# mixed prompt lengths cycling over both admission buckets (<=8 and 9..16)
+MIX_LENGTHS = [3, 8, 5, 12, 4, 16, 7, 9]
+MAX_PROMPT = max(MIX_LENGTHS)
+
+
+def _prompts(requests: int):
+    return [[(i * 7 + j) % 50 + 1
+             for j in range(MIX_LENGTHS[i % len(MIX_LENGTHS)])]
+            for i in range(requests)]
 
 
 def _engine(params, cfg, policy, slots, max_new):
     return ServingEngine(params, cfg, policy=policy, slots=slots,
-                         max_len=len(PROMPT) + max_new + 1,
+                         max_len=MAX_PROMPT + max_new + 1,
                          dtype=jnp.float32)
 
 
@@ -43,25 +58,31 @@ def bench_form(params, cfg, policy, *, slots: int, requests: int,
                max_new: int, repeats: int = 3) -> dict:
     # warmup on the SAME engine instance that gets timed: the jitted
     # prefill/tick closures are per-engine, so a throwaway warmup engine
-    # would leave the timed run paying compile time
+    # would leave the timed run paying compile time. One prompt per length
+    # bucket compiles both batched-prefill entries.
     eng = _engine(params, cfg, policy, slots, max_new)
-    eng.submit(PROMPT, max_new=max_new)
+    eng.submit([1] * 4, max_new=max_new)
+    eng.submit([1] * 12, max_new=max_new)
     eng.run_all()
 
     # best-of-N: CPU wall-clock noise (scheduler, allocator) easily exceeds
     # the 4->8-slot amortization step on sub-second runs; min time is the
     # standard denoiser
+    prompts = _prompts(requests)
+    ptoks = sum(len(p) for p in prompts)
     best = None
     for _ in range(repeats):
-        ticks0 = eng.decode_calls
-        for _ in range(requests):
-            eng.submit(PROMPT, max_new=max_new)
+        ticks0, prefills0 = eng.decode_calls, eng.prefill_calls
+        for p in prompts:
+            eng.submit(p, max_new=max_new)
         t0 = time.perf_counter()
         done = eng.run_all()
         dt = time.perf_counter() - t0
         toks = sum(len(r.out) for r in done)
         r = {"slots": slots, "tokens": toks, "secs": dt,
-             "tok_per_sec": toks / dt, "ticks": eng.decode_calls - ticks0}
+             "tok_per_sec": toks / dt, "ticks": eng.decode_calls - ticks0,
+             "prefills": eng.prefill_calls - prefills0,
+             "prompt_tokens": ptoks, "prompt_tok_per_sec": ptoks / dt}
         if best is None or r["tok_per_sec"] > best["tok_per_sec"]:
             best = r
     return best
@@ -83,6 +104,8 @@ def main():
     ap.add_argument("--check", action="store_true",
                     help="exit nonzero unless qp tokens/sec is monotonically "
                          "increasing from 1 to 8 slots")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON artifact path ('' disables)")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch), layers=args.layers,
@@ -98,9 +121,10 @@ def main():
 
     results: dict = {}
     print(f"{cfg.name} reduced(L={args.layers}, d={args.d_model}, "
-          f"V={args.vocab}), {args.requests} requests x {args.max_new} tokens")
+          f"V={args.vocab}), {args.requests} mixed-length requests "
+          f"(prompt lens {MIX_LENGTHS}) x {args.max_new} tokens")
     print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
-          f"{'secs':>7} {'tok/s':>8}")
+          f"{'prefills':>8} {'secs':>7} {'tok/s':>8} {'ptok/s':>8}")
     for form in args.forms.split(","):
         p, pol = form_params[form]
         results[form] = []
@@ -109,7 +133,21 @@ def main():
                            max_new=args.max_new, repeats=args.repeats)
             results[form].append(r)
             print(f"{form:>4} {r['slots']:>5} {r['tokens']:>7} "
-                  f"{r['ticks']:>6} {r['secs']:>7.2f} {r['tok_per_sec']:>8.1f}")
+                  f"{r['ticks']:>6} {r['prefills']:>8} {r['secs']:>7.2f} "
+                  f"{r['tok_per_sec']:>8.1f} {r['prompt_tok_per_sec']:>8.1f}")
+
+    if args.out:
+        artifact = {
+            "bench": "serving", "arch": cfg.name,
+            "reduced": {"layers": args.layers, "d_model": args.d_model,
+                        "vocab": args.vocab},
+            "requests": args.requests, "max_new": args.max_new,
+            "mix_lengths": MIX_LENGTHS, "repeats": args.repeats,
+            "results": results,
+        }
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.out}")
 
     pts = [(r["slots"], r["tok_per_sec"]) for r in results.get("qp", ())
            if r["slots"] in (1, 4, 8)]

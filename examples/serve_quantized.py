@@ -34,12 +34,15 @@ out = generate(serve_params, prompts, cfg, policy=W3A8, max_new_tokens=16)
 print("batch generate:", out.shape)
 
 # continuous batching over a request stream: requests are admitted into slots
-# of ONE shared cache; tokens are drained in bulk, never synced per token
+# of ONE shared cache via length-bucketed batched prefill (same-bucket
+# requests share one jitted prefill call); tokens are drained in bulk, never
+# synced per token
 eng = ServingEngine(serve_params, cfg, policy=W3A8, slots=4, max_len=64)
 for i in range(6):
-    eng.submit(list(range(1 + i, 6 + i)), max_new=8)
+    eng.submit(list(range(1, 4 + (i % 3) * 4)), max_new=8)   # mixed lengths
 done = eng.run_all()
 for r in done:
     print(f"req {r.uid}: {r.out}")
 print(f"{sum(len(r.out) for r in done)} tokens in {eng.decode_calls} batched "
-      f"decode ticks (continuous batching keeps slots full)")
+      f"decode ticks / {eng.prefill_calls} bucketed prefill calls "
+      f"(continuous batching keeps slots full)")

@@ -44,13 +44,27 @@ def packed_words(n: int, bits: int) -> int:
     return (n + f - 1) // f
 
 
-@partial(jax.jit, static_argnames=("bits",))
-def pack_int32(q: jnp.ndarray, bits: int = 3) -> jnp.ndarray:
-    """Pack a flat int array of b-bit signed levels into int32 words.
+def _check_levels(q: jnp.ndarray, bits: int) -> None:
+    """Enforce the pack contract on concrete inputs: every level must lie in
+    the b-bit two's-complement range [-(2^(b-1)), 2^(b-1)-1]. Out-of-range
+    values would be silently truncated to their low b bits (a wrong but
+    plausible-looking weight) — reject them instead. Traced values cannot be
+    inspected; under jit the contract is the caller's responsibility."""
+    import numpy as np
 
-    Values must lie in [-(2^(b-1)), 2^(b-1)-1]; the quantizer only emits
-    [-(2^(b-1)-1), 2^(b-1)-1] so this always holds.
-    """
+    try:
+        qn = np.asarray(q)
+    except jax.errors.TracerArrayConversionError:
+        return
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+    if qn.size and (qn.min() < lo or qn.max() > hi):
+        raise ValueError(
+            f"levels out of range for {bits}-bit packing: got "
+            f"[{qn.min()}, {qn.max()}], contract is [{lo}, {hi}]")
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def _pack_int32_impl(q: jnp.ndarray, bits: int) -> jnp.ndarray:
     f = fields_per_word(bits)
     mask = (1 << bits) - 1
     n = q.shape[0]
@@ -59,6 +73,18 @@ def pack_int32(q: jnp.ndarray, bits: int = 3) -> jnp.ndarray:
     qp = qp.reshape(nw, f) & mask  # two's complement truncation to b bits
     shifts = jnp.arange(f, dtype=jnp.int32) * bits
     return jnp.sum(qp << shifts[None, :], axis=1).astype(jnp.int32)
+
+
+def pack_int32(q: jnp.ndarray, bits: int = 3) -> jnp.ndarray:
+    """Pack a flat int array of b-bit signed levels into int32 words.
+
+    Contract: values MUST lie in [-(2^(b-1)), 2^(b-1)-1] (the quantizer only
+    emits [-(2^(b-1)-1), 2^(b-1)-1], so quantized weights always satisfy
+    it). Concrete out-of-range inputs raise ``ValueError``; under jit the
+    caller must uphold the contract (tracers cannot be inspected).
+    """
+    _check_levels(q, bits)
+    return _pack_int32_impl(q, bits)
 
 
 @partial(jax.jit, static_argnames=("bits", "n"))
@@ -78,10 +104,12 @@ def pack_matrix(q: jnp.ndarray, bits: int = 3) -> jnp.ndarray:
 
     Packing along K (the reduction axis) keeps each output column's weights
     contiguous per word, which is what the decode matvec kernel streams.
+    Same range contract as :func:`pack_int32`: concrete levels outside the
+    b-bit two's-complement range raise ``ValueError``.
     """
-    k, n = q.shape
-    f = fields_per_word(bits)
-    return jax.vmap(lambda col: pack_int32(col, bits), in_axes=1, out_axes=1)(q)
+    _check_levels(q, bits)
+    return jax.vmap(lambda col: _pack_int32_impl(col, bits),
+                    in_axes=1, out_axes=1)(q)
 
 
 def unpack_matrix(words: jnp.ndarray, k: int, bits: int = 3) -> jnp.ndarray:

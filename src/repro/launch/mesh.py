@@ -10,17 +10,27 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["compat_make_mesh", "make_production_mesh", "make_host_mesh"]
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def compat_make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` across jax versions.
+
+    ``axis_types`` (and ``jax.sharding.AxisType``) only exist in jax >= 0.5;
+    on those versions we pin every axis to ``Auto`` — the pre-0.5 default —
+    so mesh semantics are identical either way.
+    """
+    kw = {} if devices is None else {"devices": devices}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kw["axis_types"] = (axis_type.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -28,4 +38,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = min(model, n // data)
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return compat_make_mesh((data, model), ("data", "model"))

@@ -50,16 +50,22 @@ def main():
     eng = ServingEngine(params, cfg, policy=policy, slots=args.slots,
                         max_len=64 + args.max_new,
                         temperature=args.temperature, eos_id=args.eos_id)
+    # mixed prompt lengths: exercises the length-bucketed batched admission
+    lens = [4, 8, 5, 12, 3, 16, 7, 9]
     t0 = time.time()
     for i in range(args.requests):
-        eng.submit([1 + i, 2, 3, 4 + i], max_new=args.max_new)
+        plen = lens[i % len(lens)]
+        eng.submit([(1 + i + j) % 50 + 1 for j in range(plen)],
+                   max_new=args.max_new)
     done = eng.run_all()
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s on CPU), "
           f"{eng.decode_calls} batched decode ticks "
-          f"({toks / max(eng.decode_calls, 1):.2f} tok/tick)")
+          f"({toks / max(eng.decode_calls, 1):.2f} tok/tick), "
+          f"{eng.prefill_calls} bucketed prefill calls "
+          f"({len(done) / max(eng.prefill_calls, 1):.2f} req/prefill)")
 
 
 if __name__ == "__main__":

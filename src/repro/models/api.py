@@ -15,6 +15,14 @@ layout the continuous-batching engine uses. ``insert_prefill`` copies a
 single-request prefill cache into one slot of such a shared cache; the
 module-level helper here additionally takes ``cfg`` first to dispatch:
 ``insert_prefill(cfg, cache, slot, src)``.
+
+``prefill`` is batched too: ``prefill(..., lengths=(B,))`` runs N
+right-padded prompts of distinct true lengths in one call — logits come
+from each row's last real token, ``cache["len"]`` is per-row, and family
+internals (attention masking, SSM recurrence, conv tail) are padding-exact.
+``insert_prefill_many(cfg, cache, slot_map, src)`` scatters all N rows of
+such a batched prefill into the shared cache in one jitted op; rows whose
+``slot_map`` entry is >= slots are dropped (batch padding).
 """
 from __future__ import annotations
 
@@ -24,7 +32,7 @@ from repro.configs.base import ModelConfig
 from repro.models import hybrid, mamba2, transformer
 
 __all__ = ["get_model", "init_cache", "prefill", "decode_step",
-           "insert_prefill"]
+           "insert_prefill", "insert_prefill_many"]
 
 _FAMILY_MODULE = {
     "dense": transformer, "audio": transformer, "vlm": transformer,
@@ -66,3 +74,7 @@ def decode_step(params, cache, tokens, cfg: ModelConfig, **kw):
 
 def insert_prefill(cfg: ModelConfig, cache, slot, src):
     return get_model(cfg).insert_prefill(cache, slot, src)
+
+
+def insert_prefill_many(cfg: ModelConfig, cache, slot_map, src):
+    return get_model(cfg).insert_prefill_many(cache, slot_map, src)

@@ -21,7 +21,7 @@ from repro.models import mamba2, transformer
 from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
 
 __all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
-           "insert_prefill"]
+           "insert_prefill", "insert_prefill_many"]
 
 
 def _counts(cfg: ModelConfig) -> Tuple[int, int]:
@@ -61,17 +61,18 @@ def init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
 
 
 def _mamba_scan(stack, dstack, h, cfg, policy, chunk, remat: str,
-                return_state: bool = False):
+                return_state: bool = False, lengths=None):
     from repro.distributed.context import inner_unroll
 
     def body(hh, xs):
         lp, ld = xs
         if return_state:
             out, st = mamba2.block_apply(lp, hh, cfg, policy=policy, deltas=ld,
-                                         chunk=chunk, return_state=True)
+                                         chunk=chunk, return_state=True,
+                                         lengths=lengths)
             return out, st
         return mamba2.block_apply(lp, hh, cfg, policy=policy, deltas=ld,
-                                  chunk=chunk), None
+                                  chunk=chunk, lengths=lengths), None
 
     if remat != "none":
         body = jax.checkpoint(body, prevent_cse=False)
@@ -143,10 +144,21 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas=None, dtype=jnp.bfloat16, attn_chunk: int = 1024,
-            max_len: Optional[int] = None, chunk: int = mamba2.DEFAULT_CHUNK):
+            max_len: Optional[int] = None, chunk: int = mamba2.DEFAULT_CHUNK,
+            lengths: Optional[jnp.ndarray] = None):
+    """``lengths`` (B,) enables right-padded multi-request prefill: mamba
+    blocks mask the SSD recurrence / gather the true conv tail (see
+    mamba2.block_apply), attention is causal so real positions never see the
+    padding, and the junk K/V written at padded slots is masked out by decode
+    (per-row ``len``) until overwritten."""
     n_groups, n_tail = _counts(cfg)
     bsz, s = batch["tokens"].shape
     max_len = max_len or s
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        if s > max_len:
+            raise ValueError(f"padded prefill length {s} exceeds max_len "
+                             f"{max_len}")
     h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
     positions = jnp.arange(s)[None, :]
@@ -156,7 +168,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     def group_body(hh, xs):
         gp, gd = xs
         hh, mstates = _mamba_scan(gp, gd, hh, cfg, policy, chunk, "none",
-                                  return_state=True)
+                                  return_state=True, lengths=lengths)
         hh, _, (k, v) = transformer._layer_forward(
             shared, sdelta, hh, cfg, policy, positions, inv_freq, attn_chunk)
         return hh, (mstates, k, v)
@@ -170,10 +182,16 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     state["kv"]["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
     if n_tail:
         h, tstates = _mamba_scan(params["tail"], _dget(deltas, "tail"), h, cfg,
-                                 policy, chunk, "none", return_state=True)
+                                 policy, chunk, "none", return_state=True,
+                                 lengths=lengths)
         state["tail"] = tstates
-    state["len"] = jnp.asarray(s, jnp.int32)
-    hln = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    if lengths is not None:
+        h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+        state["len"] = lengths
+    else:
+        h = h[:, -1:]
+        state["len"] = jnp.asarray(s, jnp.int32)
+    hln = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     return _logits(params, hln, cfg, policy, deltas), state
 
 
@@ -247,4 +265,28 @@ def insert_prefill(state, slot, src):
     out["len"] = jax.lax.dynamic_update_slice(
         state["len"], jnp.reshape(src["len"], (1,)).astype(state["len"].dtype),
         (slot,))
+    return out
+
+
+def insert_prefill_many(state, slot_map, src):
+    """Scatter an N-row batched prefill state into rows ``slot_map`` (N,) of
+    a slot-major shared state (per-slot ``len``). Batch axes as in
+    :func:`insert_prefill`; ``slot_map[i] >= slots`` entries are dropped
+    (padding rows)."""
+    out = dict(state)
+    out["groups"] = jax.tree_util.tree_map(
+        lambda dst, s: dst.at[:, :, slot_map].set(s.astype(dst.dtype),
+                                                  mode="drop"),
+        state["groups"], src["groups"])
+    out["kv"] = jax.tree_util.tree_map(
+        lambda dst, s: dst.at[:, slot_map].set(s.astype(dst.dtype),
+                                               mode="drop"),
+        state["kv"], src["kv"])
+    if "tail" in state:
+        out["tail"] = jax.tree_util.tree_map(
+            lambda dst, s: dst.at[:, slot_map].set(s.astype(dst.dtype),
+                                                   mode="drop"),
+            state["tail"], src["tail"])
+    out["len"] = state["len"].at[slot_map].set(
+        jnp.asarray(src["len"]).astype(state["len"].dtype), mode="drop")
     return out

@@ -25,7 +25,8 @@ from repro.distributed.context import constrain
 from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
 
 __all__ = ["init", "forward", "init_state", "decode_step", "insert_prefill",
-           "block_init", "block_apply", "block_decode", "DEFAULT_CHUNK"]
+           "insert_prefill_many", "block_init", "block_apply", "block_decode",
+           "DEFAULT_CHUNK"]
 
 DEFAULT_CHUNK = 256
 
@@ -192,11 +193,20 @@ def _ssd_chunked(x, b_mat, c_mat, dt, a_log, chunk: int, bf16: bool = False):
 
 def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
                 deltas: Optional[Dict] = None, chunk: int = DEFAULT_CHUNK,
-                return_state: bool = False):
+                return_state: bool = False,
+                lengths: Optional[jnp.ndarray] = None):
     """Full Mamba2 block (pre-norm residual).
 
     With ``return_state`` returns (out, {"ssm", "conv"}) — the exact decode
-    state after the sequence (prefill→decode continuation)."""
+    state after the sequence (prefill→decode continuation).
+
+    ``lengths`` (B,) marks right-padded rows: dt is zeroed at padding
+    positions, which makes the SSD recurrence an exact identity there
+    (decay ``exp(0·a)=1``, input weight ``dt·x=0``) — so the carried SSM
+    state equals the state after each row's last REAL token. The conv state
+    is gathered from each row's true trailing window for the same reason.
+    The causal conv itself needs no masking: position ``i < len`` only sees
+    inputs ``<= i``, all real."""
     bsz, l, _ = h_in.shape
     hn = rmsnorm(lp["norm"], h_in, cfg.norm_eps)
     di = cfg.d_inner
@@ -226,6 +236,9 @@ def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
     b_mat = b_mat.reshape(bsz, l, cfg.ssm_ngroups, cfg.ssm_state)
     c_mat = c_mat.reshape(bsz, l, cfg.ssm_ngroups, cfg.ssm_state)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    if lengths is not None:
+        valid = jnp.arange(l)[None, :] < lengths[:, None]           # (B, L)
+        dt = dt * valid[..., None]          # identity recurrence at padding
     y, s_final = _ssd_chunked(x, b_mat, c_mat, dt, lp["a_log"], chunk,
                               bf16=cfg.ssm_bf16)
     y = y + x.astype(jnp.float32) * lp["ssm_d"][:, None]        # D skip
@@ -236,10 +249,18 @@ def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
     out = constrain(h_in + out, "act")
     if return_state:
         wlen = cfg.ssm_conv
-        pad = max(wlen - 1 - l, 0)
-        tail = xbc_pre[:, -(wlen - 1):].astype(jnp.float32)
-        if pad:
-            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        if lengths is not None:
+            # per-row trailing window [len-(W-1), len): positions < 0 are
+            # the initial zero conv state (short prompts)
+            idx = lengths[:, None] - (wlen - 1) + jnp.arange(wlen - 1)[None]
+            tail = jnp.take_along_axis(xbc_pre.astype(jnp.float32),
+                                       jnp.maximum(idx, 0)[:, :, None], axis=1)
+            tail = jnp.where((idx >= 0)[:, :, None], tail, 0.0)
+        else:
+            pad = max(wlen - 1 - l, 0)
+            tail = xbc_pre[:, -(wlen - 1):].astype(jnp.float32)
+            if pad:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
         return out, {"ssm": s_final, "conv": tail}
     return out
 
@@ -346,23 +367,35 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=jnp.bfloat1
 
 def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas=None, dtype=jnp.bfloat16, attn_chunk: int = 0,
-            max_len: Optional[int] = None, chunk: int = DEFAULT_CHUNK):
-    """Prompt pass returning final logits + exact decode-ready state."""
+            max_len: Optional[int] = None, chunk: int = DEFAULT_CHUNK,
+            lengths: Optional[jnp.ndarray] = None):
+    """Prompt pass returning final logits + exact decode-ready state.
+
+    ``lengths`` (B,) enables right-padded multi-request prefill: the SSD
+    recurrence is masked so each row's state stops at its true length,
+    logits come from each row's last real token, and ``len`` is per-row."""
     h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
     bsz, l = batch["tokens"].shape
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
 
     def body(hh, xs):
         lp, ld = xs
         out, st = block_apply(lp, hh, cfg, policy=policy, deltas=ld,
-                              chunk=chunk, return_state=True)
+                              chunk=chunk, return_state=True, lengths=lengths)
         return out, st
 
     ld = deltas.get("layers") if deltas else None
     h, states = jax.lax.scan(body, h, (params["layers"], ld))
-    hln = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    if lengths is not None:
+        h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    else:
+        h = h[:, -1:]
+    hln = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, hln, cfg, policy, deltas)
-    return logits, {"layers": states, "len": jnp.asarray(l, jnp.int32)}
+    clen = jnp.asarray(l, jnp.int32) if lengths is None else lengths
+    return logits, {"layers": states, "len": clen}
 
 
 def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
@@ -393,4 +426,17 @@ def insert_prefill(state, slot, src):
     ln = jax.lax.dynamic_update_slice(
         state["len"], jnp.reshape(src["len"], (1,)).astype(state["len"].dtype),
         (slot,))
+    return {"layers": layers, "len": ln}
+
+
+def insert_prefill_many(state, slot_map, src):
+    """Scatter an N-row batched prefill state into rows ``slot_map`` (N,) of
+    a slot-major shared state (per-slot ``len``). Entries with
+    ``slot_map[i] >= slots`` are dropped (padding rows)."""
+    layers = jax.tree_util.tree_map(
+        lambda dst, s: dst.at[:, slot_map].set(s.astype(dst.dtype),
+                                               mode="drop"),
+        state["layers"], src["layers"])
+    ln = state["len"].at[slot_map].set(
+        jnp.asarray(src["len"]).astype(state["len"].dtype), mode="drop")
     return {"layers": layers, "len": ln}

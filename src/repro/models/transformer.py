@@ -31,7 +31,7 @@ from repro.models.layers import (apply_rope, embed_init, embed_logits,
                                  mlp_init, rmsnorm, rmsnorm_init, rope_freqs)
 
 __all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
-           "insert_prefill"]
+           "insert_prefill", "insert_prefill_many"]
 
 
 # --- init -----------------------------------------------------------------------
@@ -227,12 +227,25 @@ def _quantize_kv(x: jnp.ndarray):
 def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
             attn_chunk: int = 1024, max_len: Optional[int] = None,
-            quantize_cache: bool = False):
-    """Run the prompt, build the KV cache. Returns (last_logits, cache)."""
+            quantize_cache: bool = False,
+            lengths: Optional[jnp.ndarray] = None):
+    """Run the prompt, build the KV cache. Returns (last_logits, cache).
+
+    ``lengths`` (B,) enables right-padded multi-request prefill: row ``i``
+    holds a prompt of true length ``lengths[i]`` left-aligned in the padded
+    (B, S) token array. Causal attention means valid positions never see the
+    padding; the returned logits are gathered at each row's last REAL token
+    and ``cache["len"]`` is the per-row true length, so decode overwrites /
+    masks the junk K/V at padded positions. Requires S <= cache length (the
+    sliding-window ring-roll path is per-row-ambiguous under padding).
+    """
     h = _embed_input(params, batch, cfg, policy, deltas, dtype)
     s = h.shape[1]
     max_len = max_len or s
     cs = cache_len_for(cfg, max_len)
+    if lengths is not None and s > cs:
+        raise ValueError(f"padded prefill length {s} exceeds cache length "
+                         f"{cs}; per-row ring alignment is undefined")
     positions = jnp.arange(s)[None, :]
     inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
 
@@ -245,7 +258,12 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
     ld = deltas.get("layers") if deltas else None
     h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], ld))
-    h = rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    if lengths is not None:
+        lengths = jnp.asarray(lengths, jnp.int32)
+        h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
+    else:
+        h = h[:, -1:]
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, h, cfg, policy, deltas)
     if cs > ks.shape[2]:
         padw = cs - ks.shape[2]
@@ -256,13 +274,13 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
         # token s-cs+i at slot i; roll by s % cs so it sits at (s+i) % cs.
         ks = jnp.roll(ks, s % cs, axis=2)
         vs = jnp.roll(vs, s % cs, axis=2)
+    clen = jnp.asarray(s, jnp.int32) if lengths is None else lengths
     if quantize_cache:
         qk, sk = jax.vmap(_quantize_kv)(ks)       # over layer dim
         qv, sv = jax.vmap(_quantize_kv)(vs)
-        cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv,
-                 "len": jnp.asarray(s, jnp.int32)}
+        cache = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv, "len": clen}
     else:
-        cache = {"k": ks, "v": vs, "len": jnp.asarray(s, jnp.int32)}
+        cache = {"k": ks, "v": vs, "len": clen}
     return logits, cache
 
 
@@ -351,4 +369,20 @@ def insert_prefill(cache, slot, src):
     out["len"] = jax.lax.dynamic_update_slice(
         cache["len"], jnp.reshape(src["len"], (1,)).astype(cache["len"].dtype),
         (slot,))
+    return out
+
+
+def insert_prefill_many(cache, slot_map, src):
+    """Scatter an N-row batched prefill cache into rows ``slot_map`` (N,) of
+    a slot-major shared cache (per-slot ``len``). One jitted scatter admits
+    every request at once; entries with ``slot_map[i] >= slots`` are dropped
+    (JAX scatter OOB semantics) — the engine points padding rows there.
+    """
+    out = dict(cache)
+    names = ("k", "v") + (("k_scale", "v_scale") if "k_scale" in cache else ())
+    for name in names:                       # leaves (L, slots, ...): axis 1
+        out[name] = cache[name].at[:, slot_map].set(
+            src[name].astype(cache[name].dtype), mode="drop")
+    out["len"] = cache["len"].at[slot_map].set(
+        jnp.asarray(src["len"]).astype(cache["len"].dtype), mode="drop")
     return out

@@ -9,9 +9,18 @@ side:
     length counters — allocated once at construction (all three families:
     KV cache, SSM state, hybrid group state; all three weight forms: ``w``
     float, ``q`` levels, ``qp`` packed containers).
-  * Admission: a queued request prefilling into a free slot via the family's
-    ``insert_prefill`` (single jitted insert, slot index traced — no
-    per-slot recompile).
+  * Admission is LENGTH-BUCKETED and batched: queued prompts are padded to a
+    small set of power-of-two length buckets and every same-bucket request
+    is prefilled in ONE jitted call (``prefill(..., lengths=)`` — families
+    are padding-exact) and inserted with ONE jitted multi-slot scatter
+    (``insert_prefill_many``). The prefill batch dimension is pinned to
+    ``slots`` (short admissions are padded with dummy rows whose slot-map
+    entry is out of range, so the scatter drops them), which bounds jit
+    re-traces to O(#buckets) — not O(#distinct prompt lengths) — and keeps
+    the 3-bit weight stream amortized across requests during admission,
+    exactly as the decode tick amortizes it across slots. ``prefill_calls``
+    counts batched prefill invocations the way ``decode_calls`` counts
+    ticks.
   * ONE jitted ``decode_step`` per tick advances every active slot at once.
     Sampling and termination (budget exhausted / EOS) are computed on-device
     as masks; inactive slots are frozen in-graph (token and length held), so
@@ -28,9 +37,11 @@ drain is also what discovers early-freed slots.
 
 Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows,
 and dynamic activation scales (``policy.act_bits``) are per-tensor — under
-either, a slot's tokens can depend on what else is in the batch. Dense/ssm/
-hybrid decode with weight-only quantization is row-independent and therefore
-token-identical to single-request ``generate``.
+either, a slot's tokens can depend on what else is in the batch (this now
+includes the admission batch: bucketed prefill runs requests and padding
+rows together). Dense/ssm/hybrid decode AND batched prefill with
+weight-only quantization are row-independent and therefore token-identical
+to single-request ``generate``.
 """
 from __future__ import annotations
 
@@ -47,6 +58,9 @@ from repro.models import api as model_api
 from repro.models import get_model
 
 __all__ = ["generate", "Request", "ServingEngine"]
+
+# smallest admission bucket: prompts of length 1..8 share one compilation
+_MIN_BUCKET = 8
 
 
 def _sample(key, logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
@@ -105,8 +119,15 @@ class ServingEngine:
     drain; ``run_all()`` = drive until queue and slots are empty.
 
     ``decode_calls`` counts ticks — each is exactly one ``decode_step``
-    invocation regardless of the number of active slots (asserted by
-    tests/test_engine_batched.py).
+    invocation regardless of the number of active slots — and
+    ``prefill_calls`` counts admissions the same way: all queued requests
+    sharing a length bucket enter through ONE jitted batched prefill + ONE
+    jitted multi-slot admit (asserted by tests/test_engine_batched.py and
+    tests/test_engine_bucketed.py).
+
+    Admission order is FIFO by bucket: each admission round serves the
+    oldest queued request's bucket, and other same-bucket requests ride
+    along (bounded queue-jumping in exchange for batched prefill).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, policy: QuantPolicy,
@@ -138,12 +159,19 @@ class ServingEngine:
         self._finished: List[Request] = []    # synced but not yet returned
         self._uid = 0
         self.decode_calls = 0                 # ticks == decode_step calls
-        # donate the shared cache (argument 2): without donation every tick
-        # and every admission materializes a full second copy of the
-        # slot-major cache. The small per-slot vectors are NOT donated —
+        self.prefill_calls = 0                # batched prefill invocations
+        # admission buckets are capped by the cache length: for sliding-
+        # window archs the ring slice in prefill is only per-row-exact while
+        # padded length <= window, so longer prompts take the solo path
+        self._bucket_cap = (self.mod.cache_len_for(cfg, max_len)
+                            if hasattr(self.mod, "cache_len_for") else max_len)
+        # donate the shared cache (argument 2 / argument 1): without donation
+        # every tick and every admission materializes a full second copy of
+        # the slot-major cache. The small per-slot vectors are NOT donated —
         # pending records hold references to pre-tick `active` arrays.
         self._tick_fn = jax.jit(self._tick, donate_argnums=(1,))
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(1,))
+        self._admit_many_fn = jax.jit(self._admit_many, donate_argnums=(0,))
         self._prefill_fn = jax.jit(self._prefill)
 
     # --- jitted graph builders (self.mod looked up at trace time so tests can
@@ -155,9 +183,10 @@ class ServingEngine:
     def _eos(self) -> int:
         return -1 if self.eos_id is None else int(self.eos_id)  # -1 never hits
 
-    def _prefill(self, params, toks):
+    def _prefill(self, params, toks, lengths=None):
         return self.mod.prefill(params, {"tokens": toks}, self.cfg,
-                                max_len=self.max_len, **self._mkw())
+                                max_len=self.max_len, lengths=lengths,
+                                **self._mkw())
 
     def _tick(self, params, cache, tokens, active, emitted, budget, key):
         """Advance every active slot one token. Masks computed on-device."""
@@ -186,9 +215,31 @@ class ServingEngine:
         budget = jax.lax.dynamic_update_slice(budget, req_budget[None], (slot,))
         return cache, tokens, active, emitted, budget
 
+    def _admit_many(self, cache, tokens, active, emitted, budget, slot_map,
+                    src, logits0, req_budget, key):
+        """Insert an N-row batched prefill into slots ``slot_map`` and
+        sample every row's first token — ONE jitted call for the whole
+        admission round. Rows with ``slot_map[i] >= slots`` are batch
+        padding: every scatter drops them (JAX OOB-scatter semantics)."""
+        cache = self.mod.insert_prefill_many(cache, slot_map, src)
+        t0 = _sample(key, logits0[:, 0], self.temperature).astype(jnp.int32)
+        tokens = tokens.at[slot_map].set(t0[:, None], mode="drop")
+        # the prefill sample already counts: a max_new==1 request (or an
+        # immediate EOS) never becomes active
+        act0 = (req_budget > 1) & (t0 != self._eos())
+        active = active.at[slot_map].set(act0, mode="drop")
+        emitted = emitted.at[slot_map].set(jnp.ones_like(req_budget),
+                                           mode="drop")
+        budget = budget.at[slot_map].set(req_budget, mode="drop")
+        return cache, tokens, active, emitted, budget
+
     # --- public API ---------------------------------------------------------
 
     def submit(self, prompt: List[int], max_new: int = 16) -> int:
+        if len(prompt) == 0:
+            # a [] prompt would build a (1, 0) token array and crash deep
+            # inside prefill; reject it where the caller can see why
+            raise ValueError("prompt must contain at least one token")
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
         if len(prompt) + max_new > self.max_len:
@@ -198,6 +249,13 @@ class ServingEngine:
         self.queue.append(Request(self._uid, list(prompt), max_new))
         return self._uid
 
+    def _bucket_len(self, plen: int) -> int:
+        """Admission bucket: next power of two >= plen (floor _MIN_BUCKET),
+        capped at the cache length — a small static set, so jitted prefill
+        re-traces O(#buckets) times under arbitrary mixed prompt lengths."""
+        return min(max(_MIN_BUCKET, 1 << (plen - 1).bit_length()),
+                   self._bucket_cap)
+
     def _free_slots(self) -> List[int]:
         return [s for s in range(self.slots) if self._slot_req[s] is None]
 
@@ -205,7 +263,9 @@ class ServingEngine:
         return any(r is not None for r in self._slot_req)
 
     def _spin_up(self):
-        """Admit queued requests into free slots (prefill + slot insert)."""
+        """Admit queued requests into free slots, one length bucket at a
+        time: every same-bucket queued request enters through ONE jitted
+        batched prefill + ONE jitted multi-slot admit."""
         if not self.queue:
             return
         free = self._free_slots()
@@ -215,25 +275,84 @@ class ServingEngine:
             self._sync()
             free = self._free_slots()
         while self.queue and free:
-            slot, req = free.pop(0), self.queue.pop(0)
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            logits0, src = self._prefill_fn(self.params, toks)
-            self._key, k = jax.random.split(self._key)
-            (self.cache, self._tokens, self._active, self._emitted,
-             self._budget) = self._admit_fn(
-                self.params, self.cache, self._tokens, self._active,
-                self._emitted, self._budget, jnp.asarray(slot, jnp.int32),
-                src, logits0, jnp.asarray(req.max_new, jnp.int32), k)
-            self._slot_req[slot] = req
-            self._ticks_left[slot] = req.max_new - 1
-            # record the prefill token: emitted by `slot` only; done iff the
-            # request never became active (max_new == 1 or immediate EOS)
-            mask = jnp.zeros((self.slots,), bool).at[slot].set(True)
-            self._pending.append((self._tokens[:, 0], mask,
-                                  mask & ~self._active,
-                                  tuple(self._slot_req)))
-            if self._ticks_left[slot] <= 0:
-                self._slot_req[slot] = None    # lifetime over; drain finishes it
+            head = self.queue[0]
+            if len(head.prompt) > self._bucket_cap:
+                # sliding-window ring overflow: padded per-row ring alignment
+                # is undefined, so this prompt takes the exact solo path
+                self._admit_solo(free.pop(0), self.queue.pop(0))
+                continue
+            bucket = self._bucket_len(len(head.prompt))
+            batch: List[Request] = []
+            rest: List[Request] = []
+            for r in self.queue:
+                if (len(batch) < len(free)
+                        and len(r.prompt) <= self._bucket_cap
+                        and self._bucket_len(len(r.prompt)) == bucket):
+                    batch.append(r)
+                else:
+                    rest.append(r)
+            self.queue = rest
+            slot_ids = [free.pop(0) for _ in batch]
+            self._admit_batch(slot_ids, batch, bucket)
+
+    def _admit_batch(self, slot_ids: List[int], reqs: List[Request],
+                     bucket: int):
+        """Prefill ``reqs`` (all in one length bucket) right-padded to
+        ``bucket`` in a single jitted call, then scatter them into
+        ``slot_ids`` with a single jitted admit. The batch dimension is
+        pinned to ``slots`` (dummy rows carry an out-of-range slot-map
+        entry, so every scatter drops them): jit re-traces are keyed only
+        on the bucket length."""
+        n = self.slots
+        toks = np.zeros((n, bucket), np.int32)
+        lens = np.ones((n,), np.int32)            # dummy rows: valid length 1
+        slot_map = np.full((n,), self.slots, np.int32)   # OOB -> dropped
+        budgets = np.ones((n,), np.int32)
+        for i, (s, r) in enumerate(zip(slot_ids, reqs)):
+            toks[i, :len(r.prompt)] = r.prompt
+            lens[i], slot_map[i], budgets[i] = len(r.prompt), s, r.max_new
+        logits0, src = self._prefill_fn(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lens))
+        self.prefill_calls += 1
+        self._key, k = jax.random.split(self._key)
+        (self.cache, self._tokens, self._active, self._emitted,
+         self._budget) = self._admit_many_fn(
+            self.cache, self._tokens, self._active, self._emitted,
+            self._budget, jnp.asarray(slot_map), src, logits0,
+            jnp.asarray(budgets), k)
+        self._record_admitted(slot_ids, reqs)
+
+    def _admit_solo(self, slot: int, req: Request):
+        """Exact-length single-request admission (prompts longer than the
+        bucket cap, i.e. past the sliding-window ring)."""
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        logits0, src = self._prefill_fn(self.params, toks)
+        self.prefill_calls += 1
+        self._key, k = jax.random.split(self._key)
+        (self.cache, self._tokens, self._active, self._emitted,
+         self._budget) = self._admit_fn(
+            self.params, self.cache, self._tokens, self._active,
+            self._emitted, self._budget, jnp.asarray(slot, jnp.int32),
+            src, logits0, jnp.asarray(req.max_new, jnp.int32), k)
+        self._record_admitted([slot], [req])
+
+    def _record_admitted(self, slot_ids: List[int], reqs: List[Request]):
+        """Post-admit bookkeeping shared by the batched and solo paths:
+        record the prefill tokens — emitted by the admitted slots only, done
+        iff a request never became active (max_new == 1 / instant EOS) —
+        and release slots whose lifetime is already over (drain finishes
+        them)."""
+        mask_np = np.zeros((self.slots,), bool)
+        for s, r in zip(slot_ids, reqs):
+            self._slot_req[s] = r
+            self._ticks_left[s] = r.max_new - 1
+            mask_np[s] = True
+        mask = jnp.asarray(mask_np)
+        self._pending.append((self._tokens[:, 0], mask, mask & ~self._active,
+                              tuple(self._slot_req)))
+        for s in slot_ids:
+            if self._ticks_left[s] <= 0:
+                self._slot_req[s] = None
 
     def step(self):
         """Admit, then advance ALL active slots with ONE jitted decode call.

@@ -1,0 +1,142 @@
+"""Length-bucketed batched admission: N same-bucket requests enter through
+ONE jitted prefill + ONE jitted multi-slot admit, jit re-traces are bounded
+by the bucket count (not the number of distinct prompt lengths), and
+mixed-length batched prefill is token-exact vs single-request ``generate``
+in all three families — including under staggered mid-decode admission.
+
+Weight-only policies (``act_bits=None``) throughout: dynamic activation
+scales are per-tensor, which couples batch rows and breaks exact
+cross-batch-size parity (see test_engine_batched.py for the same rule).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.precision import FLOAT, W3A8
+from repro.models import get_model
+from repro.serving.engine import ServingEngine, generate
+
+W3 = dataclasses.replace(W3A8, act_bits=None)
+
+ARCH_FOR = {"dense": "qwen2-1.5b", "ssm": "mamba2-2.7b",
+            "hybrid": "zamba2-1.2b"}
+
+# heterogeneous lengths spanning two buckets (<=8 and 9..16)
+PROMPTS = [
+    [1, 2, 3],
+    [7, 8, 9, 10, 11],
+    [20, 21, 22, 23, 24, 25, 26, 27, 28],
+    [30, 31, 32, 33],
+    [40, 41, 42, 43, 44, 45, 46, 47, 48, 49, 50, 51],
+]
+
+
+def _setup(family, form):
+    layers = 4 if family == "hybrid" else 2
+    cfg = reduced(get_config(ARCH_FOR[family]), layers=layers, d_model=32,
+                  vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    if form == "w":
+        return cfg, params, FLOAT
+    if form == "q":
+        return cfg, quant_dense.export_levels(params, W3), W3
+    return cfg, quant_dense.export_container(params, W3), W3
+
+
+def _ref(params, cfg, policy, prompt, max_new):
+    out = generate(params, jnp.asarray([prompt], jnp.int32), cfg,
+                   policy=policy, max_new_tokens=max_new, dtype=jnp.float32)
+    return [int(t) for t in np.asarray(out[0, len(prompt):])]
+
+
+@pytest.mark.parametrize("form", ["w", "qp"])
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_mixed_length_batched_admission_matches_generate(family, form):
+    """Heterogeneous prompt lengths admitted in bucketed batches, with a
+    staggered mid-decode submission wave: every request's tokens equal its
+    own solo ``generate`` run (slot rows are independent)."""
+    cfg, params, policy = _setup(family, form)
+    refs = {tuple(p): _ref(params, cfg, policy, p, 5) for p in PROMPTS}
+    eng = ServingEngine(params, cfg, policy=policy, slots=3, max_len=32,
+                        dtype=jnp.float32)
+    uid_to_prompt = {}
+    for p in PROMPTS[:3]:                        # first wave fills all slots
+        uid_to_prompt[eng.submit(p, max_new=5)] = tuple(p)
+    eng.step(); eng.step()                       # decode in flight...
+    for p in PROMPTS[3:]:                        # ...second wave queues up
+        uid_to_prompt[eng.submit(p, max_new=5)] = tuple(p)
+    done = eng.run_all()
+    assert len(done) == len(PROMPTS) and all(r.done for r in done)
+    for r in done:
+        assert r.out == refs[uid_to_prompt[r.uid]], \
+            (family, form, uid_to_prompt[r.uid], r.out)
+    # two length buckets were in play -> at most two prefill compilations
+    assert eng._prefill_fn._cache_size() <= 2
+
+
+def test_same_bucket_admission_is_single_prefill_and_admit():
+    """Admitting N same-bucket queued requests issues exactly ONE jitted
+    prefill call and ONE jitted admit (the tentpole invariant)."""
+    cfg, params, policy = _setup("dense", "w")
+    eng = ServingEngine(params, cfg, policy=policy, slots=4, max_len=32,
+                        dtype=jnp.float32)
+    for ln in (3, 4, 5, 6):                      # all in the <=8 bucket
+        eng.submit(list(range(1, ln + 1)), max_new=3)
+    eng.step()
+    assert eng.prefill_calls == 1
+    assert eng._prefill_fn._cache_size() == 1
+    assert eng._admit_many_fn._cache_size() == 1
+    eng.run_all()
+    # a later same-bucket wave: one more batched call, NO new compilation
+    eng.submit([9, 9, 9], max_new=3)
+    eng.submit([5, 5], max_new=3)
+    eng.step()
+    assert eng.prefill_calls == 2
+    assert eng._prefill_fn._cache_size() == 1
+
+
+def test_retraces_bounded_by_bucket_count():
+    """Ten distinct prompt lengths, two buckets: jit cache stays at two
+    entries — O(#buckets), not O(#distinct lengths)."""
+    cfg, params, policy = _setup("dense", "w")
+    eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=32,
+                        dtype=jnp.float32)
+    for ln in range(1, 11):                      # lengths 1..10
+        eng.submit([1] * ln, max_new=2)
+    done = eng.run_all()
+    assert len(done) == 10
+    assert eng._prefill_fn._cache_size() <= 2
+    assert eng.prefill_calls >= 2                # several admission rounds...
+    assert eng.decode_calls >= 1
+
+
+def test_mixed_buckets_one_round_two_prefills():
+    """A single spin-up with two buckets in the queue issues one batched
+    prefill per bucket (not per request)."""
+    cfg, params, policy = _setup("dense", "w")
+    eng = ServingEngine(params, cfg, policy=policy, slots=4, max_len=32,
+                        dtype=jnp.float32)
+    eng.submit([1, 2, 3], max_new=2)             # bucket 8
+    eng.submit([1] * 12, max_new=2)              # bucket 16
+    eng.submit([4, 5], max_new=2)                # bucket 8 again
+    eng.step()
+    assert eng.prefill_calls == 2
+
+
+def test_submit_rejects_empty_prompt():
+    """A [] prompt must fail fast at submit() with ValueError, not crash
+    deep inside prefill with a (1, 0) token array (regression)."""
+    cfg, params, policy = _setup("dense", "w")
+    eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=16,
+                        dtype=jnp.float32)
+    with pytest.raises(ValueError, match="at least one token"):
+        eng.submit([], max_new=4)
+    assert eng.queue == []                       # nothing half-enqueued
+    eng.submit([1, 2], max_new=4)                # engine still usable
+    done = eng.run_all()
+    assert len(done) == 1 and len(done[0].out) == 4

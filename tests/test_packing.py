@@ -50,6 +50,22 @@ def test_negative_min_level():
     np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
 
 
+def test_out_of_range_levels_rejected():
+    """Levels outside the b-bit range raise instead of silently truncating
+    to a wrong-but-plausible weight (the documented pack contract)."""
+    import pytest
+
+    with pytest.raises(ValueError, match="out of range"):
+        packing.pack_int32(jnp.array([0, 4, 1], jnp.int32), 3)   # 4 > 3
+    with pytest.raises(ValueError, match="out of range"):
+        packing.pack_int32(jnp.array([-5], jnp.int32), 3)        # -5 < -4
+    with pytest.raises(ValueError, match="out of range"):
+        packing.pack_matrix(jnp.full((4, 2), 9, jnp.int32), 3)
+    # boundary values are legal
+    packing.pack_int32(jnp.array([-4, 3], jnp.int32), 3)
+    packing.pack_matrix(jnp.array([[-2], [1]], jnp.int32), 2)
+
+
 def test_packed_nbytes_compression():
     # 3M weights (paper digit net): packed ~1.2MB vs 11.6MB float32
     n = 2_903_512

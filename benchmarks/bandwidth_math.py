@@ -13,6 +13,23 @@ from repro.configs import get_config
 
 V5E_HBM = 819e9  # B/s
 
+# per-weight HBM traffic of each serve form, bytes/weight (the number the
+# README "serve forms & kernel dispatch" table cites):
+#   w   bf16 float weights                      2.0  (GPU-like baseline)
+#   q   form A, int8 levels (Pallas qmatmul)    1.0
+#   qp  form B, 3-bit containers, 10 wt/int32
+#       (Pallas qmatvec — the paper's BRAM image) 0.4  (= 3.2 bits)
+SERVE_FORM_BYTES = {"w": 2.0, "q": 1.0, "qp": 0.4}
+
+
+def serve_form_table(arch: str = "qwen2-1.5b"):
+    """Decode bandwidth bound per serve form: one full weight read per
+    token, tok/s = HBM_bytes_per_s / (params * bytes_per_weight)."""
+    n = get_config(arch).param_count()
+    return {form: {"bytes_per_weight": bpw,
+                   "tok_per_s_per_chip": V5E_HBM / (n * bpw)}
+            for form, bpw in SERVE_FORM_BYTES.items()}
+
 
 def run():
     rows = []
@@ -30,6 +47,13 @@ def run():
         toks_per_s = V5E_HBM / (n * bytes_per_w)     # single chip, batch>=1
         rows.append((f"decode.qwen2-1.5b.{name}", 1e6 / toks_per_s,
                      f"tokens_per_s_per_chip={toks_per_s:.0f}"))
+
+    # --- per-serve-form traffic table (the engine's w/q/qp axis) --------------
+    for form, t in serve_form_table(cfg.name).items():
+        rows.append((f"serve_form.{cfg.name}.{form}",
+                     1e6 / t["tok_per_s_per_chip"],
+                     f"bytes_per_weight={t['bytes_per_weight']};"
+                     f"tokens_per_s_per_chip={t['tok_per_s_per_chip']:.0f}"))
     return rows
 
 

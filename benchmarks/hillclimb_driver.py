@@ -15,9 +15,6 @@ confirmed/refuted. Stops a ladder after 3 consecutive <5% improvements.
 import dataclasses
 import json
 
-import jax.numpy as jnp
-
-from repro.core import quant_dense
 from repro.launch import hillclimb as hc
 
 
@@ -29,10 +26,11 @@ def run_ladder(cell, steps):
     for step in steps:
         knobs = dict(step["knobs"])
         # cfg-level / module-level knobs
-        if knobs.pop("dequant_bf16", False):
-            quant_dense.DEQUANT_DTYPE = jnp.bfloat16
-        else:
-            quant_dense.DEQUANT_DTYPE = jnp.float32
+        # dequant_bf16 is historical: the unified kernel dispatch
+        # (quant_dense.serve_apply) matmuls raw levels in the activation
+        # dtype and scales the output, so the fp32 dequantized-weight
+        # intermediate that knob used to shrink no longer exists at all.
+        knobs.pop("dequant_bf16", False)
         cfg_over = {}
         if knobs.pop("ssm_bf16", False):
             cfg_over["ssm_bf16"] = True
@@ -46,7 +44,6 @@ def run_ladder(cell, steps):
         try:
             rec, terms = hc.measure(arch, shape, knobs)
         finally:
-            quant_dense.DEQUANT_DTYPE = jnp.float32
             if ssm_bf16:
                 hc.get_config = orig_get
         dom = terms["step_bound_s"]
@@ -100,16 +97,15 @@ DECODE_LADDER = [
          knobs={"quant": "float"}, predict="down", keep=False),
     dict(change="w3 levels (int8) instead of containers",
          hypothesis="int8 levels keep 2x-less weight bytes than bf16 without "
-                    "the container unpack chain: below the float baseline",
+                    "the container unpack chain: below the float baseline "
+                    "(the fused serve dispatch now matmuls levels in the "
+                    "activation dtype — the fp32 dequant intermediate the "
+                    "old dequant_bf16 step targeted no longer exists)",
          knobs={"quant": "w3levels"}, predict="down"),
-    dict(change="dequantize directly in bf16 (skip fp32 intermediate)",
-         hypothesis="dequant intermediate halves 4B->2B per weight: memory "
-                    "term down ~25%",
-         knobs={"quant": "w3levels", "dequant_bf16": True}, predict="down"),
     dict(change="int8 KV cache (+per-token scales)",
          hypothesis="cache reads are ~half the remaining bytes; int8 halves "
                     "them: memory term down ~20-30%",
-         knobs={"quant": "w3levels", "dequant_bf16": True, "kv8": True},
+         knobs={"quant": "w3levels", "kv8": True},
          predict="down"),
 ]
 

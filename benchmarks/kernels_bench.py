@@ -1,15 +1,49 @@
-"""Kernel micro-bench: packed-weight paths vs float matmul on this CPU
-(numbers are CPU-relative; the TPU story is the roofline analysis)."""
+"""Kernel micro-bench + interpret-mode regression gate for the serve-path
+matmuls.
+
+Two shape cases mirror the LM serve path exactly:
+
+  decode    (B=slots, K) x (K, N)            — one engine tick
+  prefill   (slots*bucket_len, K) x (K, N)   — one bucketed admission
+
+and three implementations per case:
+
+  matmul_f32      float weights (the GPU-like baseline)
+  dequant.q/qp    the fused serve fallback (quant_dense.serve_apply,
+                  mode='dequant'): levels matmul'd in the activation dtype,
+                  delta applied to the output — what 'auto' runs off-TPU
+  kernel.q/qp     the Pallas qmatmul (levels) / qmatvec (containers) kernels
+                  in interpret mode — numerics-exact stand-in for the TPU
+                  path; timed only with --smoke-size shapes (interpret is an
+                  emulator, its timings are not meaningful)
+
+Every kernel case is PARITY-CHECKED against the dequantized
+``effective_weight`` oracle; any mismatch exits nonzero, which is the CI
+kernel-regression gate (`--smoke`). Results are written to a JSON artifact
+(default ``BENCH_kernels.json``) and archived next to BENCH_serving.json.
+
+    PYTHONPATH=src python benchmarks/kernels_bench.py           # timings
+    PYTHONPATH=src python benchmarks/kernels_bench.py --smoke   # CI gate
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import quant_dense
 from repro.core.packing import pack_matrix
-from repro.kernels.qmatmul.ref import qmatmul_ref
-from repro.kernels.qmatvec.ref import qmatvec_ref
+from repro.core.precision import W3A8
+from repro.kernels.qmatmul.ops import qmatmul
+from repro.kernels.qmatvec.ops import qmatvec
+
+# serve-path shapes: slots=8 decode tick, 8 slots x 16-token bucket prefill
+FULL_CASES = [("decode", 8, 1024, 1024), ("prefill", 8 * 16, 1024, 1024)]
+SMOKE_CASES = [("decode", 8, 96, 128), ("prefill", 8 * 16, 96, 128)]
 
 
 def _time(fn, *args, reps=10):
@@ -21,29 +55,96 @@ def _time(fn, *args, reps=10):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run():
-    key = jax.random.PRNGKey(0)
-    m, k, n = 100, 1022, 1022
-    x = jax.random.normal(key, (m, k))
-    w = jax.random.normal(key, (k, n))
-    q = jax.random.randint(key, (k, n), -3, 4, jnp.int8)
-    wp = pack_matrix(q, 3)
-    d = jnp.ones((n,)) * 0.1
+def _leaves(key, k, n):
+    kx, kw = jax.random.split(key)
+    w = jax.random.normal(kw, (k, n))
+    q = jax.random.randint(kw, (k, n), -3, 4, jnp.int8)
+    d = jnp.abs(jax.random.normal(kx, (n,))) * 0.1 + 0.01
+    b = jax.random.normal(kx, (n,)) * 0.1
+    qp = pack_matrix(q, 3)
+    delta = d.reshape(1, n)
+    return {
+        "w": w,
+        "q": {"q": q, "delta": delta, "b": b},
+        "qp": {"qp": qp, "delta": delta, "b": b},
+    }
 
-    f_float = jax.jit(lambda x, w: x @ w)
-    f_q = jax.jit(lambda x, q, d: qmatmul_ref(x, q, d))
-    f_qp = jax.jit(lambda x, wp, d: qmatvec_ref(x, wp, d, k))
-    return [
-        ("kernel.cpu.matmul_f32", _time(f_float, x, w), f"shape={m}x{k}x{n}"),
-        ("kernel.cpu.qmatmul_ref", _time(f_q, x, q, d), "int8 levels + delta"),
-        ("kernel.cpu.qmatvec_ref", _time(f_qp, x, wp, d),
-         "3.2-bit containers unpacked in-graph"),
-    ]
+
+def _parity(case, form, leaf, x, out):
+    """Kernel output vs the dequantized effective_weight oracle."""
+    w = quant_dense.effective_weight(leaf, W3A8, "hidden", k=x.shape[-1])
+    ref = x @ w.astype(x.dtype) + leaf["b"]
+    err = float(jnp.max(jnp.abs(out - ref)))
+    ok = bool(np.allclose(np.asarray(out), np.asarray(ref),
+                          rtol=1e-4, atol=1e-4))
+    return {"case": f"{case}.{form}", "max_abs_err": err, "ok": ok}
+
+
+def run_cases(smoke: bool = False):
+    rows, parity = [], []
+    reps = 3 if smoke else 10
+    for case, m, k, n in (SMOKE_CASES if smoke else FULL_CASES):
+        leaves = _leaves(jax.random.PRNGKey(0), k, n)
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, k))
+        shape = f"shape={m}x{k}x{n}"
+
+        f_float = jax.jit(lambda x, w: x @ w)
+        rows.append((f"kernel.cpu.{case}.matmul_f32",
+                     _time(f_float, x, leaves["w"], reps=reps), shape))
+        for form in ("q", "qp"):
+            leaf = leaves[form]
+            f_dq = jax.jit(lambda x, lf=leaf: quant_dense.serve_apply(
+                lf, x, mode="dequant"))
+            rows.append((f"kernel.cpu.{case}.dequant.{form}",
+                         _time(f_dq, x, reps=reps), shape))
+            # interpret-mode Pallas path: parity-checked always, timed only
+            # at smoke sizes (the interpret emulator's speed is meaningless)
+            f_kn = jax.jit(lambda x, lf=leaf: quant_dense.serve_apply(
+                lf, x, mode="kernel", interpret=True))
+            out = f_kn(x)
+            parity.append(_parity(case, form, leaf, x, out))
+            if smoke:
+                rows.append((f"kernel.cpu.{case}.kernel.{form}.interpret",
+                             _time(f_kn, x, reps=reps), shape))
+    return rows, parity
+
+
+def run(smoke: bool = True):
+    """Harness entry (benchmarks/run.py): flat name,us,derived rows."""
+    rows, parity = run_cases(smoke=smoke)
+    return rows + [(f"kernel.parity.{p['case']}", 0.0,
+                    f"max_abs_err={p['max_abs_err']:.2e};"
+                    f"{'ok' if p['ok'] else 'FAIL'}") for p in parity]
 
 
 def main():
-    for name, us, derived in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + exit nonzero on any kernel-vs-"
+                         "oracle parity failure (the CI gate)")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="JSON artifact path ('' disables)")
+    args = ap.parse_args()
+
+    rows, parity = run_cases(smoke=args.smoke)
+    for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived}")
+    bad = [p for p in parity if not p["ok"]]
+    for p in parity:
+        print(f"parity.{p['case']},{p['max_abs_err']:.2e},"
+              f"{'ok' if p['ok'] else 'FAIL'}")
+
+    if args.out:
+        artifact = {"bench": "kernels", "smoke": args.smoke,
+                    "rows": [{"name": n, "us": us, "derived": d}
+                             for n, us, d in rows],
+                    "parity": parity}
+        with open(args.out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {args.out}")
+
+    if bad:
+        raise SystemExit(f"kernel parity FAILED: {[p['case'] for p in bad]}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,16 @@ dominated by the batch-independent container unpack and the amortization is
 strongest), plus admission throughput: batched ``prefills`` issued and
 prompt tokens/sec (``ptok/s``) absorbed through them.
 
+Per-config timing is split into prefill vs decode seconds (engine profile
+timers): non-monotonic tok/s points are usually an admission effect — more
+slots means fewer, larger batched prefills — and the split pins down which
+phase moved. The profile wrapper blocks on each jitted call, trading the
+engine's async-drain overlap for phase attribution; on CPU (effectively
+synchronous execution) the measured overhead is nil, but pass
+``--no-profile`` to time the pure async path (no split in the artifact).
+``--matmul-mode`` selects the quantized-matmul dispatch
+(auto/kernel/dequant; kernel is interpret-mode off-TPU).
+
 Results are also written as a JSON artifact (default ``BENCH_serving.json``)
 so CI can archive the perf trajectory.
 
@@ -48,19 +58,22 @@ def _prompts(requests: int):
             for i in range(requests)]
 
 
-def _engine(params, cfg, policy, slots, max_new):
+def _engine(params, cfg, policy, slots, max_new, matmul_mode="auto",
+            profile=True):
     return ServingEngine(params, cfg, policy=policy, slots=slots,
                          max_len=MAX_PROMPT + max_new + 1,
-                         dtype=jnp.float32)
+                         dtype=jnp.float32, matmul_mode=matmul_mode,
+                         profile=profile)
 
 
 def bench_form(params, cfg, policy, *, slots: int, requests: int,
-               max_new: int, repeats: int = 3) -> dict:
+               max_new: int, repeats: int = 3,
+               matmul_mode: str = "auto", profile: bool = True) -> dict:
     # warmup on the SAME engine instance that gets timed: the jitted
     # prefill/tick closures are per-engine, so a throwaway warmup engine
     # would leave the timed run paying compile time. One prompt per length
     # bucket compiles both batched-prefill entries.
-    eng = _engine(params, cfg, policy, slots, max_new)
+    eng = _engine(params, cfg, policy, slots, max_new, matmul_mode, profile)
     eng.submit([1] * 4, max_new=max_new)
     eng.submit([1] * 12, max_new=max_new)
     eng.run_all()
@@ -73,16 +86,22 @@ def bench_form(params, cfg, policy, *, slots: int, requests: int,
     best = None
     for _ in range(repeats):
         ticks0, prefills0 = eng.decode_calls, eng.prefill_calls
+        psecs0, dsecs0 = eng.prefill_secs, eng.decode_secs
         for p in prompts:
             eng.submit(p, max_new=max_new)
         t0 = time.perf_counter()
         done = eng.run_all()
         dt = time.perf_counter() - t0
         toks = sum(len(r.out) for r in done)
+        # the prefill/decode split makes per-phase regressions visible: a
+        # tok/s dip can hide admission cost (more slots => fewer, bigger
+        # batched prefills) behind decode amortization, and vice versa
         r = {"slots": slots, "tokens": toks, "secs": dt,
              "tok_per_sec": toks / dt, "ticks": eng.decode_calls - ticks0,
              "prefills": eng.prefill_calls - prefills0,
-             "prompt_tokens": ptoks, "prompt_tok_per_sec": ptoks / dt}
+             "prompt_tokens": ptoks, "prompt_tok_per_sec": ptoks / dt,
+             "prefill_secs": eng.prefill_secs - psecs0,
+             "decode_secs": eng.decode_secs - dsecs0}
         if best is None or r["tok_per_sec"] > best["tok_per_sec"]:
             best = r
     return best
@@ -98,6 +117,15 @@ def main():
     ap.add_argument("--forms", default="qp,q,w")
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repetitions per config; best run reported")
+    ap.add_argument("--matmul-mode", default="auto",
+                    choices=["auto", "kernel", "dequant"],
+                    help="quantized-matmul dispatch for the q/qp forms "
+                         "(kernel = Pallas, interpret mode off-TPU — slow "
+                         "on CPU, for kernel-path measurement only)")
+    ap.add_argument("--no-profile", action="store_true",
+                    help="disable the per-phase timers (they block on each "
+                         "jitted call): times the pure async engine, at the "
+                         "cost of the prefill/decode split in the artifact")
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--d-model", type=int, default=128)
     ap.add_argument("--vocab", type=int, default=512)
@@ -124,16 +152,20 @@ def main():
           f"V={args.vocab}), {args.requests} mixed-length requests "
           f"(prompt lens {MIX_LENGTHS}) x {args.max_new} tokens")
     print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
-          f"{'prefills':>8} {'secs':>7} {'tok/s':>8} {'ptok/s':>8}")
+          f"{'prefills':>8} {'secs':>7} {'pfill_s':>7} {'dec_s':>7} "
+          f"{'tok/s':>8} {'ptok/s':>8}")
     for form in args.forms.split(","):
         p, pol = form_params[form]
         results[form] = []
         for slots in slot_counts:
             r = bench_form(p, cfg, pol, slots=slots, requests=args.requests,
-                           max_new=args.max_new, repeats=args.repeats)
+                           max_new=args.max_new, repeats=args.repeats,
+                           matmul_mode=args.matmul_mode,
+                           profile=not args.no_profile)
             results[form].append(r)
             print(f"{form:>4} {r['slots']:>5} {r['tokens']:>7} "
                   f"{r['ticks']:>6} {r['prefills']:>8} {r['secs']:>7.2f} "
+                  f"{r['prefill_secs']:>7.2f} {r['decode_secs']:>7.2f} "
                   f"{r['tok_per_sec']:>8.1f} {r['prompt_tok_per_sec']:>8.1f}")
 
     if args.out:
@@ -143,6 +175,7 @@ def main():
                         "vocab": args.vocab},
             "requests": args.requests, "max_new": args.max_new,
             "mix_lengths": MIX_LENGTHS, "repeats": args.repeats,
+            "matmul_mode": args.matmul_mode,
             "results": results,
         }
         with open(args.out, "w") as f:

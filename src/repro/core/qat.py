@@ -14,7 +14,8 @@ Two delta modes:
   * fixed ``delta`` — frozen from the post-float-training quantization step.
 
 Activations: the paper uses 8-bit signals between layers. ``fake_quant_act``
-quantizes activations with a dynamic per-tensor absmax scale and STE.
+quantizes activations with a dynamic absmax scale (per leading batch row, so
+serving slots stay independent) and STE.
 
 ``three_step_pipeline`` drives the full paper recipe:
   1. float training          (caller's train_fn)
@@ -51,20 +52,31 @@ def fake_quant(w: jnp.ndarray, spec: qz.QuantSpec,
 
 
 def fake_quant_act(x: jnp.ndarray, bits: int = 8, signed: bool = True) -> jnp.ndarray:
-    """8-bit (default) activation fake-quant, dynamic per-tensor absmax scale.
+    """8-bit (default) activation fake-quant, dynamic PER-ROW absmax scale.
+
+    For ``x`` with a leading batch dim (ndim >= 2) the scale is computed per
+    leading row — one scale per batch element, reduced over every other
+    axis. A per-tensor scale would couple batch rows: in the slot-major
+    serving engine one slot's activations would then perturb every other
+    slot's quantization grid, breaking batched-vs-solo token parity. Per-row
+    scales keep slots independent (and are strictly finer-grained, so QAT
+    accuracy only improves). 1-D inputs keep the per-tensor scale.
 
     For unsigned activations (post-sigmoid, in [0, 1]) use ``signed=False``:
     levels 0..2^b-1, matching the paper's 8-bit inter-tile signals.
     """
     xf = x.astype(jnp.float32)
+    axes = tuple(range(1, xf.ndim)) if xf.ndim >= 2 else None
     if signed:
         m = float(2 ** (bits - 1) - 1)
-        scale = jax.lax.stop_gradient(jnp.max(jnp.abs(xf)))
+        scale = jax.lax.stop_gradient(
+            jnp.max(jnp.abs(xf), axis=axes, keepdims=xf.ndim >= 2))
         scale = jnp.maximum(scale / m, 1e-12)
         q = jnp.clip(ste_round(xf / scale), -m, m)
     else:
         m = float(2 ** bits - 1)
-        scale = jax.lax.stop_gradient(jnp.max(xf))
+        scale = jax.lax.stop_gradient(
+            jnp.max(xf, axis=axes, keepdims=xf.ndim >= 2))
         scale = jnp.maximum(scale / m, 1e-12)
         q = jnp.clip(ste_round(xf / scale), 0.0, m)
     return (q * scale).astype(x.dtype)

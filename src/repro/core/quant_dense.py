@@ -14,6 +14,20 @@ A weight leaf takes one of three forms (all flow through the same model code):
 ``export_levels`` / ``export_container`` convert a trained tree to the serve
 forms (per-output-channel deltas; stacked layer dims handled). Biases stay
 full precision per the paper.
+
+Serve-form matmuls route through a unified kernel dispatch
+(:func:`serve_apply`) selected by ``mode``:
+
+  'kernel'   Pallas kernels — qmatvec streams ``qp`` containers (0.4 B/wt),
+             qmatmul streams ``q`` levels (1 B/wt); the weight is expanded
+             only inside VMEM, exactly the paper's expand-at-the-multiplier
+             rule. Runs in interpret mode off-TPU (slow; for tests).
+  'dequant'  fused fallback: the int levels are cast to the ACTIVATION dtype
+             and matmul'd directly, with the per-channel delta applied to
+             the (M, N) output — never to the (K, N) weight. No fp32
+             dequantized weight matrix exists in the graph; numerics match
+             the kernel epilogue (fp32 accumulate, delta+bias at the end).
+  'auto'     'kernel' on TPU, 'dequant' elsewhere (the serving default).
 """
 from __future__ import annotations
 
@@ -27,7 +41,8 @@ from repro.core import quantizer as qz
 from repro.core.precision import QuantPolicy
 from repro.core.treeutil import flatten_with_path, map_with_path, role_of, unflatten
 
-__all__ = ["init", "apply", "effective_weight", "fit_deltas", "fit_deltas_stacked",
+__all__ = ["init", "apply", "serve_apply", "tied_logits", "resolve_matmul_mode",
+           "MATMUL_MODES", "effective_weight", "fit_deltas", "fit_deltas_stacked",
            "export_levels", "export_container", "export_packed", "packed_apply"]
 
 
@@ -43,30 +58,40 @@ def init(key, in_dim: int, out_dim: int, *, bias: bool = True,
     return p
 
 
-# dequantization compute dtype for the serve forms. float32 materializes a
-# 4 B/weight intermediate in-graph; bfloat16 halves that traffic (beyond-paper
-# optimization, §Perf H-dequant) — the Pallas kernels avoid it entirely on
-# real TPUs by dequantizing in VMEM.
-DEQUANT_DTYPE = jnp.float32
+MATMUL_MODES = ("auto", "kernel", "dequant")
+
+
+def resolve_matmul_mode(mode: str) -> str:
+    """'auto' -> Pallas kernels on TPU, fused-dequant matmul elsewhere."""
+    if mode == "auto":
+        from repro.kernels.qmatmul.ops import on_tpu
+        return "kernel" if on_tpu() else "dequant"
+    if mode not in ("kernel", "dequant"):
+        raise ValueError(f"matmul mode must be one of {MATMUL_MODES}, "
+                         f"got {mode!r}")
+    return mode
 
 
 def effective_weight(params, policy: QuantPolicy, role: str,
                      delta: Optional[jnp.ndarray] = None,
-                     k: Optional[int] = None) -> jnp.ndarray:
+                     k: Optional[int] = None,
+                     dtype=jnp.float32) -> jnp.ndarray:
     """The weight the forward pass sees. ``params``: leaf dict or raw array.
 
     ``k``: logical reduction dim (required for the "qp" container form —
-    callers know it from the activation shape)."""
+    callers know it from the activation shape). For the serve forms this
+    MATERIALIZES the dequantized matrix at ``dtype`` — it is the reference
+    oracle (tests) and the 3D-expert fallback; the serve path itself goes
+    through :func:`serve_apply`, which never builds this product."""
     if not isinstance(params, dict):
         params = {"w": params}
-    dq = DEQUANT_DTYPE
     if "qp" in params:
         from repro.core import packing
         assert k is not None, "container form needs the logical K"
         q = packing.unpack_matrix(params["qp"], k, 3)
-        return q.astype(dq) * params["delta"].astype(dq)
+        return q.astype(dtype) * params["delta"].astype(dtype)
     if "q" in params:
-        return params["q"].astype(dq) * params["delta"].astype(dq)
+        return params["q"].astype(dtype) * params["delta"].astype(dtype)
     w = params["w"]
     spec = policy.spec_for(role)
     if spec is None:
@@ -74,12 +99,76 @@ def effective_weight(params, policy: QuantPolicy, role: str,
     return qat.fake_quant(w, spec, delta)
 
 
+def serve_apply(params: Dict[str, Any], x: jnp.ndarray, *,
+                mode: str = "auto", out_dtype=None,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Dense forward for a 2D serve-form leaf ({"q"} or {"qp"}, + "delta",
+    optional "b") — the unified kernel dispatch. Never materializes a
+    dequantized weight matrix: 'kernel' expands the weight in VMEM (Pallas),
+    'dequant' matmuls the raw levels in the activation dtype and applies
+    delta/bias to the (M, N) output. Both share the kernel's numerics
+    (fp32 accumulate, fp32 epilogue, one cast to ``out_dtype`` — default
+    the activation dtype; pass fp32 for precision-sensitive outputs like
+    router/logit heads under bf16 activations)."""
+    mode = resolve_matmul_mode(mode)
+    k = x.shape[-1]
+    bias = params.get("b")
+    delta = params["delta"].reshape(-1)          # (1, N) -> (N,)
+    if mode == "kernel":
+        if "qp" in params:
+            from repro.kernels.qmatvec import ops as qmv_ops
+            return qmv_ops.qmatvec(x, params["qp"], delta, k=k, bias=bias,
+                                   out_dtype=out_dtype, interpret=interpret)
+        from repro.kernels.qmatmul import ops as qmm_ops
+        return qmm_ops.qmatmul(x, params["q"], delta, bias=bias,
+                               out_dtype=out_dtype, interpret=interpret)
+    if "qp" in params:
+        from repro.core import packing
+        lv = packing.unpack_matrix(params["qp"], k, 3)
+    else:
+        lv = params["q"]
+    lead = x.shape[:-1]
+    acc = jnp.dot(x.reshape(-1, k), lv.astype(x.dtype),
+                  preferred_element_type=jnp.float32)
+    acc = acc * delta.astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    return acc.astype(out_dtype or x.dtype).reshape(*lead, lv.shape[-1])
+
+
+def tied_logits(params: Dict[str, Any], h: jnp.ndarray, *,
+                mode: str = "auto",
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Tied-embedding readout h @ (q*delta)^T for a serve-form embedding
+    table {"q": (V, D), "delta": (1, D)} — without dequantizing the table.
+    delta is per-embedding-dim, i.e. per REDUCTION dim of the readout, so it
+    rescales the activations instead: (h * delta) @ q^T."""
+    mode = resolve_matmul_mode(mode)
+    d1 = params["delta"].reshape(-1).astype(jnp.float32)       # (D,)
+    hs = (h.astype(jnp.float32) * d1).astype(h.dtype)
+    if mode == "kernel":
+        from repro.kernels.qmatmul import ops as qmm_ops
+        return qmm_ops.qmatmul(hs, params["q"].T, 1.0, interpret=interpret)
+    lead = h.shape[:-1]
+    acc = jnp.einsum("md,vd->mv", hs.reshape(-1, hs.shape[-1]),
+                     params["q"].astype(h.dtype),
+                     preferred_element_type=jnp.float32)
+    return acc.astype(h.dtype).reshape(*lead, params["q"].shape[0])
+
+
 def apply(params: Dict[str, Any], x: jnp.ndarray, *, policy: QuantPolicy,
           role: str = "hidden", delta: Optional[jnp.ndarray] = None,
-          quantize_input: bool = False) -> jnp.ndarray:
-    """Dense forward under any weight form."""
+          quantize_input: bool = False, mode: str = "auto",
+          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Dense forward under any weight form. Serve forms ({"q"}/{"qp"})
+    dispatch through :func:`serve_apply` per ``mode``; float/fake-quant
+    master weights take the classic matmul."""
+    if not isinstance(params, dict):
+        params = {"w": params}
     if quantize_input and policy.act_bits:
         x = qat.fake_quant_act(x, policy.act_bits)
+    if "qp" in params or "q" in params:
+        return serve_apply(params, x, mode=mode, interpret=interpret)
     w = effective_weight(params, policy, role, delta, k=x.shape[-1])
     y = x @ w.astype(x.dtype)
     if "b" in params:
@@ -190,6 +279,11 @@ def export_container(params: Any, policy: QuantPolicy) -> Any:
             import math
             k = math.prod(leaf.shape[nd:-1])
             q2 = q.reshape(leaf.shape[:nd] + (k, leaf.shape[-1]))
+            # range contract must be enforced HERE, on the concrete stacked
+            # levels: inside the vmapped pack below they are tracers and
+            # pack_matrix's own check cannot see them (out-of-range values
+            # would truncate to wrong-but-plausible weights)
+            packing._check_levels(q2, 3)
             pack = lambda m: packing.pack_matrix(m, 3)
             for _ in range(nd):
                 pack = jax.vmap(pack)

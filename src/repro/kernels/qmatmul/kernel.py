@@ -30,7 +30,7 @@ _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerPa
 __all__ = ["qmatmul_pallas"]
 
 
-def _kernel(x_ref, w_ref, d_ref, o_ref, acc_ref):
+def _kernel(x_ref, w_ref, d_ref, b_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -42,19 +42,22 @@ def _kernel(x_ref, w_ref, d_ref, o_ref, acc_ref):
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = (acc_ref[...] * d_ref[...].astype(jnp.float32)
-                      ).astype(o_ref.dtype)
+                      + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret",
                                              "out_dtype"))
-def qmatmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray, *,
+def qmatmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
+                   bias: jnp.ndarray | None = None, *,
                    bm: int = 256, bn: int = 512, bk: int = 512,
                    out_dtype=None, interpret: bool = False) -> jnp.ndarray:
-    """x (M, K) x w_q (K, N) int8 levels x delta (N,) -> (M, N)."""
+    """x (M, K) x w_q (K, N) int8 levels x delta (N,) [+ bias (N,)] -> (M, N)."""
     m, k = x.shape
     k2, n = w_q.shape
     assert k == k2, (x.shape, w_q.shape)
     delta = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
+    bias = (jnp.zeros((n,), jnp.float32) if bias is None
+            else jnp.broadcast_to(jnp.asarray(bias, jnp.float32), (n,)))
     out_dtype = out_dtype or x.dtype
     bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
     # pad to block multiples (zeros contribute nothing to the accumulation)
@@ -65,6 +68,7 @@ def qmatmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray, *,
         w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
     if np_ != n:
         delta = jnp.pad(delta, (0, np_ - n))
+        bias = jnp.pad(bias, (0, np_ - n))
 
     grid = (mp // bm, np_ // bn, kp // bk)
     out = pl.pallas_call(
@@ -74,6 +78,7 @@ def qmatmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray, *,
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
@@ -81,5 +86,5 @@ def qmatmul_pallas(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray, *,
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w_q, delta)
+    )(x, w_q, delta, bias)
     return out[:m, :n]

@@ -1,8 +1,10 @@
-"""Jit'd public wrapper for the packed-W3 matmul kernel.
+"""Jit'd public wrapper for the levels-form (int8) W3 matmul kernel.
 
 Handles leading batch dims, interpret-mode fallback on CPU (the container
-runtime), and block-size selection. ``qdense``: full quantized dense layer
-(kernel matmul + bias).
+runtime), and block-size selection. Serves the ``q`` weight form in the
+``quant_dense.serve_apply`` kernel dispatch — batched decode ``(B, K)`` and
+bucketed prefill ``(slots*bucket_len, K)`` shapes alike — with the bias
+fused into the kernel epilogue. ``qdense``: full quantized dense layer.
 """
 from __future__ import annotations
 
@@ -29,10 +31,16 @@ def pick_blocks(m: int, n: int, k: int):
     return bm, bn, bk
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "out_dtype"))
 def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
-            interpret: bool | None = None) -> jnp.ndarray:
-    """(..., K) x (K, N) int8 levels -> (..., N); delta (N,) or scalar."""
+            bias: jnp.ndarray | None = None,
+            interpret: bool | None = None, out_dtype=None) -> jnp.ndarray:
+    """(..., K) x (K, N) int8 levels -> (..., N); delta (N,) or scalar.
+
+    ``bias`` (N,) is fused into the kernel epilogue (after the delta
+    rescale, in fp32). ``out_dtype`` overrides the output dtype (the fp32
+    accumulator is cast once, in the epilogue — e.g. fp32 logits from bf16
+    activations)."""
     if interpret is None:
         interpret = not on_tpu()
     lead = x.shape[:-1]
@@ -40,14 +48,12 @@ def qmatmul(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
     n = w_q.shape[-1]
     x2 = x.reshape(-1, k)
     bm, bn, bk = pick_blocks(x2.shape[0], n, k)
-    out = qmatmul_pallas(x2, w_q, delta, bm=bm, bn=bn, bk=bk,
-                         interpret=interpret)
+    out = qmatmul_pallas(x2, w_q, delta, bias, bm=bm, bn=bn, bk=bk,
+                         out_dtype=out_dtype, interpret=interpret)
     return out.reshape(*lead, n)
 
 
 def qdense(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
            bias: jnp.ndarray | None = None, interpret: bool | None = None):
-    y = qmatmul(x, w_q, delta, interpret=interpret)
-    if bias is not None:
-        y = y + bias.astype(y.dtype)
-    return y
+    """Quantized dense layer: kernel matmul with the bias fused in."""
+    return qmatmul(x, w_q, delta, bias, interpret=interpret)

@@ -1,4 +1,4 @@
-"""Pure-jnp oracle for the packed-W3 matmul kernel."""
+"""Pure-jnp oracle for the levels-form W3 matmul kernel."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,12 +7,17 @@ __all__ = ["qmatmul_ref"]
 
 
 def qmatmul_ref(x: jnp.ndarray, w_q: jnp.ndarray, delta: jnp.ndarray,
+                bias: jnp.ndarray | None = None,
                 out_dtype=None) -> jnp.ndarray:
     """x (M, K) @ dequant(w_q (K, N) int8 levels, delta (N,) or scalar).
 
-    Matches the kernel's numerics: fp32 accumulate, delta applied at the end.
+    Matches the kernel's numerics: fp32 accumulate, delta (and the optional
+    fused bias) applied in fp32 at the end.
     """
     out_dtype = out_dtype or x.dtype
     acc = jnp.dot(x.astype(jnp.float32), w_q.astype(jnp.float32),
                   preferred_element_type=jnp.float32)
-    return (acc * jnp.asarray(delta, jnp.float32)).astype(out_dtype)
+    acc = acc * jnp.asarray(delta, jnp.float32)
+    if bias is not None:
+        acc = acc + jnp.asarray(bias, jnp.float32)
+    return acc.astype(out_dtype)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: decode-time matvec streaming 3.2-bit packed weights.
+"""Pallas TPU kernel: decode/prefill matmul streaming 3.2-bit packed weights.
 
 THE paper's regime on TPU (DESIGN §3): decode GEMMs have arithmetic intensity
 ~1 FLOP/byte, entirely HBM-bandwidth-bound. This kernel streams the weight
@@ -10,8 +10,14 @@ the VPU) is free: the kernel is still bandwidth-bound after a 5x traffic cut.
 Layout: words (KP, N) int32 where word j of column n holds weights
 k = 10j..10j+9 (packed along K, see core.packing.pack_matrix). The kernel
 unpacks a (bkp, bn) word tile to a (10*bkp, bn) level tile in VMEM, converts
-to the activation dtype, and MXU-accumulates against the (B, 10*bkp)
-activation slice. fp32 accumulator in VMEM scratch across the KP grid.
+to the activation dtype, and MXU-accumulates against the (bm, 10*bkp)
+activation slice. fp32 accumulator in VMEM scratch across the KP grid; the
+epilogue applies the per-channel delta and the (optional, fused) bias.
+
+The grid covers M too: the same kernel serves batched decode (M = active
+slots) and bucketed prefill (M = slots x bucket_len) — weight words stream
+once per M-tile regardless of how many rows ride in it, which is the paper's
+batch-amortization argument verbatim.
 """
 from __future__ import annotations
 
@@ -44,8 +50,8 @@ def _unpack_tile(words: jnp.ndarray) -> jnp.ndarray:
     return lv.reshape(bkp * FIELDS, bn)
 
 
-def _kernel(x_ref, w_ref, d_ref, o_ref, acc_ref):
-    @pl.when(pl.program_id(1) == 0)
+def _kernel(x_ref, w_ref, d_ref, b_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
@@ -53,53 +59,60 @@ def _kernel(x_ref, w_ref, d_ref, o_ref, acc_ref):
     lv = _unpack_tile(w_ref[...]).astype(x.dtype)
     acc_ref[...] += jnp.dot(x, lv, preferred_element_type=jnp.float32)
 
-    @pl.when(pl.program_id(1) == pl.num_programs(1) - 1)
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
         o_ref[...] = (acc_ref[...] * d_ref[...].astype(jnp.float32)
-                      ).astype(o_ref.dtype)
+                      + b_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "bkp", "interpret",
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bkp", "interpret",
                                              "out_dtype"))
 def qmatvec_pallas(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray,
-                   *, bn: int = 256, bkp: int = 128, out_dtype=None,
+                   bias: jnp.ndarray | None = None, *, bm: int = 256,
+                   bn: int = 256, bkp: int = 128, out_dtype=None,
                    interpret: bool = False) -> jnp.ndarray:
-    """x (B, K), w_packed (KP, N) int32, delta (N,) -> (B, N).
+    """x (M, K), w_packed (KP, N) int32, delta (N,), bias (N,)|None -> (M, N).
 
     K must satisfy KP = ceil(K/10); x is zero-padded to 10*KP internally.
     """
-    b, k = x.shape
+    m, k = x.shape
     kp, n = w_packed.shape
     assert kp * FIELDS >= k, (x.shape, w_packed.shape)
     out_dtype = out_dtype or x.dtype
     delta = jnp.broadcast_to(jnp.asarray(delta, jnp.float32), (n,))
+    bias = (jnp.zeros((n,), jnp.float32) if bias is None
+            else jnp.broadcast_to(jnp.asarray(bias, jnp.float32), (n,)))
 
+    bm = min(bm, m)
     bn = min(bn, n)
     bkp = min(bkp, kp)
+    mpad = -(-m // bm) * bm
     npad = -(-n // bn) * bn
     kppad = -(-kp // bkp) * bkp
     if npad != n:
         w_packed = jnp.pad(w_packed, ((0, 0), (0, npad - n)))
         delta = jnp.pad(delta, (0, npad - n))
+        bias = jnp.pad(bias, (0, npad - n))
     if kppad != kp:
         w_packed = jnp.pad(w_packed, ((0, kppad - kp), (0, 0)))
     xk = kppad * FIELDS
-    x = jnp.pad(x, ((0, 0), (0, xk - k)))
+    x = jnp.pad(x, ((0, mpad - m), (0, xk - k)))
 
-    grid = (npad // bn, kppad // bkp)
+    grid = (mpad // bm, npad // bn, kppad // bkp)
     out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((b, bkp * FIELDS), lambda j, kk: (0, kk)),
-            pl.BlockSpec((bkp, bn), lambda j, kk: (kk, j)),
-            pl.BlockSpec((bn,), lambda j, kk: (j,)),
+            pl.BlockSpec((bm, bkp * FIELDS), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bkp, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
         ],
-        out_specs=pl.BlockSpec((b, bn), lambda j, kk: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, npad), out_dtype),
-        scratch_shapes=[pltpu.VMEM((b, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mpad, npad), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_COMPILER_PARAMS(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(x, w_packed, delta)
-    return out[:, :n]
+    )(x, w_packed, delta, bias)
+    return out[:m, :n]

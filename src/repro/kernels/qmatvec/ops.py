@@ -1,4 +1,10 @@
-"""Jit'd wrapper for the packed decode matvec (used by quant_dense.packed_apply)."""
+"""Jit'd wrapper for the packed-container matmul kernel.
+
+Handles leading batch dims and interpret-mode fallback on CPU. Used by the
+``quant_dense.serve_apply`` kernel dispatch for the ``qp`` weight form (both
+batched decode ``(B<=slots, K)`` and bucketed prefill
+``(slots*bucket_len, K)`` shapes) and by the legacy MLP ``packed_apply``.
+"""
 from __future__ import annotations
 
 import functools
@@ -12,13 +18,19 @@ from repro.kernels.qmatvec.ref import qmatvec_ref
 __all__ = ["qmatvec"]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+@functools.partial(jax.jit, static_argnames=("k", "interpret", "out_dtype"))
 def qmatvec(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray, *,
-            k: int, interpret: bool | None = None) -> jnp.ndarray:
-    """(..., K) against container-packed (KP, N) weights -> (..., N)."""
+            k: int, bias: jnp.ndarray | None = None,
+            interpret: bool | None = None, out_dtype=None) -> jnp.ndarray:
+    """(..., K) against container-packed (KP, N) weights -> (..., N).
+
+    ``bias`` (N,) is fused into the kernel epilogue (applied after the
+    per-channel delta rescale, in fp32); ``out_dtype`` overrides the output
+    dtype (one cast from the fp32 accumulator)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     lead = x.shape[:-1]
     x2 = x.reshape(-1, k)
-    out = qmatvec_pallas(x2, w_packed, delta, interpret=interpret)
+    out = qmatvec_pallas(x2, w_packed, delta, bias, out_dtype=out_dtype,
+                         interpret=interpret)
     return out.reshape(*lead, w_packed.shape[-1])

@@ -9,9 +9,17 @@ __all__ = ["qmatvec_ref"]
 
 
 def qmatvec_ref(x: jnp.ndarray, w_packed: jnp.ndarray, delta: jnp.ndarray,
-                k: int, bits: int = 3, out_dtype=None) -> jnp.ndarray:
-    """x (B, K) @ unpack(w_packed (ceil(K/f), N)) * delta -> (B, N)."""
+                k: int, bias: jnp.ndarray | None = None, bits: int = 3,
+                out_dtype=None) -> jnp.ndarray:
+    """x (B, K) @ unpack(w_packed (ceil(K/f), N)) * delta [+ bias] -> (B, N).
+
+    Matches the kernel's numerics: fp32 accumulate, delta (and the optional
+    fused bias) applied in fp32 at the end.
+    """
     out_dtype = out_dtype or x.dtype
-    w = unpack_matrix(w_packed, k, bits).astype(jnp.float32)
-    acc = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
-    return (acc * jnp.asarray(delta, jnp.float32)).astype(out_dtype)
+    w = unpack_matrix(w_packed, k, bits).astype(x.dtype)
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = acc * jnp.asarray(delta, jnp.float32)
+    if bias is not None:
+        acc = acc + jnp.asarray(bias, jnp.float32)
+    return acc.astype(out_dtype)

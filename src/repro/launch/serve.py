@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--matmul-mode", default="auto",
+                    choices=["auto", "kernel", "dequant"],
+                    help="quantized-matmul dispatch: Pallas kernels, fused "
+                         "dequant fallback, or auto (kernel on TPU)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,7 +53,8 @@ def main():
 
     eng = ServingEngine(params, cfg, policy=policy, slots=args.slots,
                         max_len=64 + args.max_new,
-                        temperature=args.temperature, eos_id=args.eos_id)
+                        temperature=args.temperature, eos_id=args.eos_id,
+                        matmul_mode=args.matmul_mode)
     # mixed prompt lengths: exercises the length-bucketed batched admission
     lens = [4, 8, 5, 12, 3, 16, 7, 9]
     t0 = time.time()

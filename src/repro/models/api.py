@@ -23,6 +23,14 @@ internals (attention masking, SSM recurrence, conv tail) are padding-exact.
 ``insert_prefill_many(cfg, cache, slot_map, src)`` scatters all N rows of
 such a batched prefill into the shared cache in one jitted op; rows whose
 ``slot_map`` entry is >= slots are dropped (batch padding).
+
+``forward``/``prefill``/``decode_step`` additionally take
+``matmul_mode="auto"|"kernel"|"dequant"`` (threaded to every quantized
+matmul via ``quant_dense``): with serve-form params ({"q"} levels / {"qp"}
+packed containers) 'kernel' runs the Pallas qmatmul/qmatvec kernels (weights
+expanded only in VMEM), 'dequant' runs the fused levels-matmul fallback, and
+'auto' picks 'kernel' on TPU. Neither serve mode materializes a dequantized
+fp32 weight matrix in the graph.
 """
 from __future__ import annotations
 

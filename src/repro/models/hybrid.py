@@ -18,7 +18,8 @@ from repro.core import quant_dense
 from repro.core.precision import QuantPolicy
 from repro.distributed.context import constrain
 from repro.models import mamba2, transformer
-from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
+from repro.models.layers import (embed_init, embed_lookup, logits_readout,
+                                 rmsnorm, rmsnorm_init)
 
 __all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
            "insert_prefill", "insert_prefill_many"]
@@ -61,7 +62,7 @@ def init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
 
 
 def _mamba_scan(stack, dstack, h, cfg, policy, chunk, remat: str,
-                return_state: bool = False, lengths=None):
+                return_state: bool = False, lengths=None, mm: str = "auto"):
     from repro.distributed.context import inner_unroll
 
     def body(hh, xs):
@@ -69,10 +70,11 @@ def _mamba_scan(stack, dstack, h, cfg, policy, chunk, remat: str,
         if return_state:
             out, st = mamba2.block_apply(lp, hh, cfg, policy=policy, deltas=ld,
                                          chunk=chunk, return_state=True,
-                                         lengths=lengths)
+                                         lengths=lengths, matmul_mode=mm)
             return out, st
         return mamba2.block_apply(lp, hh, cfg, policy=policy, deltas=ld,
-                                  chunk=chunk, lengths=lengths), None
+                                  chunk=chunk, lengths=lengths,
+                                  matmul_mode=mm), None
 
     if remat != "none":
         body = jax.checkpoint(body, prevent_cse=False)
@@ -85,7 +87,8 @@ def _mamba_scan(stack, dstack, h, cfg, policy, chunk, remat: str,
 def forward(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
             remat: str = "layer", attn_chunk: int = 1024,
-            chunk: int = mamba2.DEFAULT_CHUNK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+            chunk: int = mamba2.DEFAULT_CHUNK,
+            matmul_mode: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
     n_groups, n_tail = _counts(cfg)
     h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
@@ -97,28 +100,28 @@ def forward(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
     def group_body(hh, xs):
         gp, gd = xs
-        hh, _ = _mamba_scan(gp, gd, hh, cfg, policy, chunk, remat)
+        hh, _ = _mamba_scan(gp, gd, hh, cfg, policy, chunk, remat,
+                            mm=matmul_mode)
         hh, _, _ = transformer._layer_forward(shared, sdelta, hh, cfg, policy,
-                                              positions, inv_freq, attn_chunk)
+                                              positions, inv_freq, attn_chunk,
+                                              matmul_mode)
         return hh, None
 
     gd = _dget(deltas, "groups")
     h, _ = jax.lax.scan(group_body, h, (params["groups"], gd))
     if n_tail:
         h, _ = _mamba_scan(params["tail"], _dget(deltas, "tail"), h, cfg,
-                           policy, chunk, remat)
+                           policy, chunk, remat, mm=matmul_mode)
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    return _logits(params, h, cfg, policy, deltas), jnp.zeros((), jnp.float32)
+    return (_logits(params, h, cfg, policy, deltas, matmul_mode),
+            jnp.zeros((), jnp.float32))
 
 
-def _logits(params, h, cfg, policy, deltas):
-    if cfg.tie_embeddings:
-        out = embed_logits(params["embed"], h, policy=policy,
-                           delta=_dget(deltas, "embed", "w"))
-    else:
-        out = quant_dense.apply(params["head"], h, policy=policy, role="output",
-                                delta=_dget(deltas, "head", "w"))
-    return constrain(out.astype(jnp.float32), "logits")
+def _logits(params, h, cfg, policy, deltas, mm: str = "auto"):
+    return logits_readout(params, h, cfg, policy=policy,
+                          embed_delta=_dget(deltas, "embed", "w"),
+                          head_delta=_dget(deltas, "head", "w"),
+                          matmul_mode=mm)
 
 
 # --- serving -----------------------------------------------------------------------
@@ -145,7 +148,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas=None, dtype=jnp.bfloat16, attn_chunk: int = 1024,
             max_len: Optional[int] = None, chunk: int = mamba2.DEFAULT_CHUNK,
-            lengths: Optional[jnp.ndarray] = None):
+            lengths: Optional[jnp.ndarray] = None,
+            matmul_mode: str = "auto"):
     """``lengths`` (B,) enables right-padded multi-request prefill: mamba
     blocks mask the SSD recurrence / gather the true conv tail (see
     mamba2.block_apply), attention is causal so real positions never see the
@@ -168,9 +172,11 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     def group_body(hh, xs):
         gp, gd = xs
         hh, mstates = _mamba_scan(gp, gd, hh, cfg, policy, chunk, "none",
-                                  return_state=True, lengths=lengths)
+                                  return_state=True, lengths=lengths,
+                                  mm=matmul_mode)
         hh, _, (k, v) = transformer._layer_forward(
-            shared, sdelta, hh, cfg, policy, positions, inv_freq, attn_chunk)
+            shared, sdelta, hh, cfg, policy, positions, inv_freq, attn_chunk,
+            matmul_mode)
         return hh, (mstates, k, v)
 
     gd = _dget(deltas, "groups")
@@ -183,7 +189,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     if n_tail:
         h, tstates = _mamba_scan(params["tail"], _dget(deltas, "tail"), h, cfg,
                                  policy, chunk, "none", return_state=True,
-                                 lengths=lengths)
+                                 lengths=lengths, mm=matmul_mode)
         state["tail"] = tstates
     if lengths is not None:
         h = jnp.take_along_axis(h, (lengths - 1)[:, None, None], axis=1)
@@ -192,11 +198,12 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
         h = h[:, -1:]
         state["len"] = jnp.asarray(s, jnp.int32)
     hln = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    return _logits(params, hln, cfg, policy, deltas), state
+    return _logits(params, hln, cfg, policy, deltas, matmul_mode), state
 
 
 def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
-                policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16):
+                policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16,
+                matmul_mode: str = "auto"):
     """One token for the whole batch. ``state["len"]`` may be scalar (uniform
     batch) or (B,) per-row lengths (slot-major continuous batching)."""
     n_groups, n_tail = _counts(cfg)
@@ -211,7 +218,8 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
 
     def mamba_body(hh, xs):
         lp, ld, st = xs
-        hh, st2 = mamba2.block_decode(lp, hh, st, cfg, policy=policy, deltas=ld)
+        hh, st2 = mamba2.block_decode(lp, hh, st, cfg, policy=policy,
+                                      deltas=ld, matmul_mode=matmul_mode)
         return hh, st2
 
     def group_body(hh, xs):
@@ -219,14 +227,15 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
         hh, gst2 = jax.lax.scan(mamba_body, hh, (gp, gd, gst))
         hn = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
         q, k, v = transformer._qkv(shared, hn, cfg, policy, sdelta, positions,
-                                   inv_freq)
+                                   inv_freq, matmul_mode)
         kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
         vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
         from repro.models.attention import decode_attention
         o = decode_attention(q, kc, vc, pos + 1)
-        hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, 1)
+        hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, 1,
+                                        matmul_mode)
         hn = rmsnorm(shared["ln2"], hh, cfg.norm_eps)
-        f, _ = transformer._ffn(shared, hn, cfg, policy, sdelta)
+        f, _ = transformer._ffn(shared, hn, cfg, policy, sdelta, matmul_mode)
         return hh + f, (gst2, kc, vc)
 
     gd = _dget(deltas, "groups")
@@ -242,7 +251,7 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
         new_state["tail"] = tstates
     new_state["len"] = state["len"] + 1
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    return _logits(params, h, cfg, policy, deltas), new_state
+    return _logits(params, h, cfg, policy, deltas, matmul_mode), new_state
 
 
 def insert_prefill(state, slot, src):

@@ -15,7 +15,8 @@ from repro.core import qat, quant_dense
 from repro.core.precision import QuantPolicy
 
 __all__ = ["rmsnorm_init", "rmsnorm", "rope_freqs", "apply_rope",
-           "mlp_init", "mlp_apply", "embed_init", "embed_lookup", "act_fn"]
+           "mlp_init", "mlp_apply", "embed_init", "embed_lookup",
+           "embed_logits", "logits_readout", "act_fn"]
 
 
 # --- norms --------------------------------------------------------------------
@@ -75,21 +76,25 @@ def mlp_init(key, d_model: int, d_ff: int, act: str = "silu",
 
 
 def mlp_apply(params: Dict[str, Any], x: jnp.ndarray, *, act: str,
-              policy: QuantPolicy, deltas: Optional[Dict] = None) -> jnp.ndarray:
+              policy: QuantPolicy, deltas: Optional[Dict] = None,
+              matmul_mode: str = "auto") -> jnp.ndarray:
     d = deltas or {}
     fn = act_fn(act)
     up = quant_dense.apply(params["up"], x, policy=policy, role="hidden",
-                           delta=(d.get("up") or {}).get("w"))
+                           delta=(d.get("up") or {}).get("w"),
+                           mode=matmul_mode)
     if "gate" in params:
         gate = quant_dense.apply(params["gate"], x, policy=policy, role="hidden",
-                                 delta=(d.get("gate") or {}).get("w"))
+                                 delta=(d.get("gate") or {}).get("w"),
+                                 mode=matmul_mode)
         h = fn(gate) * up
     else:
         h = fn(up)
     if policy.act_bits:
         h = qat.fake_quant_act(h, policy.act_bits)
     return quant_dense.apply(params["down"], h, policy=policy, role="hidden",
-                             delta=(d.get("down") or {}).get("w"))
+                             delta=(d.get("down") or {}).get("w"),
+                             mode=matmul_mode)
 
 
 # --- embeddings -----------------------------------------------------------------
@@ -109,7 +114,31 @@ def embed_lookup(params: Dict[str, Any], tokens: jnp.ndarray, *,
 
 
 def embed_logits(params: Dict[str, Any], h: jnp.ndarray, *,
-                 policy: QuantPolicy, delta=None) -> jnp.ndarray:
-    """Tied-embedding readout: h @ E^T (role 'output', 8-bit per paper)."""
+                 policy: QuantPolicy, delta=None,
+                 matmul_mode: str = "auto") -> jnp.ndarray:
+    """Tied-embedding readout: h @ E^T (role 'output', 8-bit per paper).
+
+    Serve-form tables go through ``quant_dense.tied_logits`` — delta folds
+    into the activations, the int8 table is never dequantized in-graph."""
+    if "q" in params:
+        return quant_dense.tied_logits(params, h, mode=matmul_mode)
     w = quant_dense.effective_weight(params, policy, "output", delta)
     return h @ w.astype(h.dtype).T
+
+
+def logits_readout(params: Dict[str, Any], h: jnp.ndarray, cfg, *,
+                   policy: QuantPolicy, embed_delta=None, head_delta=None,
+                   matmul_mode: str = "auto") -> jnp.ndarray:
+    """Final LM readout, shared by every family: tied-embedding or separate
+    head per ``cfg.tie_embeddings``, fp32 logits under the sharding
+    constraint."""
+    from repro.distributed.context import constrain
+
+    if cfg.tie_embeddings:
+        out = embed_logits(params["embed"], h, policy=policy,
+                           delta=embed_delta, matmul_mode=matmul_mode)
+    else:
+        out = quant_dense.apply(params["head"], h, policy=policy,
+                                role="output", delta=head_delta,
+                                mode=matmul_mode)
+    return constrain(out.astype(jnp.float32), "logits")

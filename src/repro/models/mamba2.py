@@ -22,7 +22,8 @@ from repro.configs.base import ModelConfig
 from repro.core import quant_dense
 from repro.core.precision import QuantPolicy
 from repro.distributed.context import constrain
-from repro.models.layers import embed_init, embed_logits, embed_lookup, rmsnorm, rmsnorm_init
+from repro.models.layers import (embed_init, embed_lookup, logits_readout,
+                                 rmsnorm, rmsnorm_init)
 
 __all__ = ["init", "forward", "init_state", "decode_step", "insert_prefill",
            "insert_prefill_many", "block_init", "block_apply", "block_decode",
@@ -194,7 +195,8 @@ def _ssd_chunked(x, b_mat, c_mat, dt, a_log, chunk: int, bf16: bool = False):
 def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
                 deltas: Optional[Dict] = None, chunk: int = DEFAULT_CHUNK,
                 return_state: bool = False,
-                lengths: Optional[jnp.ndarray] = None):
+                lengths: Optional[jnp.ndarray] = None,
+                matmul_mode: str = "auto"):
     """Full Mamba2 block (pre-norm residual).
 
     With ``return_state`` returns (out, {"ssm", "conv"}) — the exact decode
@@ -213,13 +215,16 @@ def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
     gn = cfg.ssm_ngroups * cfg.ssm_state
     if cfg.ssm_split_proj:
         z = quant_dense.apply(lp["wz"], hn, policy=policy, role="hidden",
-                              delta=_dget(deltas, "wz", "w"))
+                              delta=_dget(deltas, "wz", "w"), mode=matmul_mode)
         x0 = quant_dense.apply(lp["wx"], hn, policy=policy, role="hidden",
-                               delta=_dget(deltas, "wx", "w"))
+                               delta=_dget(deltas, "wx", "w"),
+                               mode=matmul_mode)
         bc0 = quant_dense.apply(lp["wbc"], hn, policy=policy, role="hidden",
-                                delta=_dget(deltas, "wbc", "w"))
+                                delta=_dget(deltas, "wbc", "w"),
+                                mode=matmul_mode)
         dt = quant_dense.apply(lp["wdt"], hn, policy=policy, role="hidden",
-                               delta=_dget(deltas, "wdt", "w"))
+                               delta=_dget(deltas, "wdt", "w"),
+                               mode=matmul_mode)
         xbc_pre = jnp.concatenate([x0, bc0], axis=-1)
         x, _ = _causal_conv(x0, lp["conv_x_w"], lp["conv_x_b"])
         bc, _ = _causal_conv(bc0, lp["conv_bc_w"], lp["conv_bc_b"])
@@ -227,7 +232,8 @@ def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
     else:
         zxbcdt = quant_dense.apply(lp["in_proj"], hn, policy=policy,
                                    role="hidden",
-                                   delta=_dget(deltas, "in_proj", "w"))
+                                   delta=_dget(deltas, "in_proj", "w"),
+                                   mode=matmul_mode)
         z, x, bc, dt = _split_proj(zxbcdt, cfg)
         xbc_pre = jnp.concatenate([x, bc], axis=-1)
         xbc, _ = _causal_conv(xbc_pre, lp["conv_w"], lp["conv_b"])
@@ -245,7 +251,8 @@ def block_apply(lp, h_in: jnp.ndarray, cfg: ModelConfig, *, policy: QuantPolicy,
     y = y.reshape(bsz, l, di).astype(h_in.dtype)
     y = rmsnorm(lp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = quant_dense.apply(lp["out_proj"], y, policy=policy, role="hidden",
-                            delta=_dget(deltas, "out_proj", "w"))
+                            delta=_dget(deltas, "out_proj", "w"),
+                            mode=matmul_mode)
     out = constrain(h_in + out, "act")
     if return_state:
         wlen = cfg.ssm_conv
@@ -277,7 +284,8 @@ def block_state(cfg: ModelConfig, batch: int):
 
 
 def block_decode(lp, h_in: jnp.ndarray, state: Dict, cfg: ModelConfig, *,
-                 policy: QuantPolicy, deltas: Optional[Dict] = None):
+                 policy: QuantPolicy, deltas: Optional[Dict] = None,
+                 matmul_mode: str = "auto"):
     """One-token step. h_in (B,1,d). Returns (h_out, new_state)."""
     bsz = h_in.shape[0]
     hn = rmsnorm(lp["norm"], h_in, cfg.norm_eps)
@@ -285,13 +293,16 @@ def block_decode(lp, h_in: jnp.ndarray, state: Dict, cfg: ModelConfig, *,
     gn = cfg.ssm_ngroups * cfg.ssm_state
     if cfg.ssm_split_proj:
         z = quant_dense.apply(lp["wz"], hn, policy=policy, role="hidden",
-                              delta=_dget(deltas, "wz", "w"))
+                              delta=_dget(deltas, "wz", "w"), mode=matmul_mode)
         x0 = quant_dense.apply(lp["wx"], hn, policy=policy, role="hidden",
-                               delta=_dget(deltas, "wx", "w"))
+                               delta=_dget(deltas, "wx", "w"),
+                               mode=matmul_mode)
         bc0 = quant_dense.apply(lp["wbc"], hn, policy=policy, role="hidden",
-                                delta=_dget(deltas, "wbc", "w"))
+                                delta=_dget(deltas, "wbc", "w"),
+                                mode=matmul_mode)
         dt = quant_dense.apply(lp["wdt"], hn, policy=policy, role="hidden",
-                               delta=_dget(deltas, "wdt", "w"))
+                               delta=_dget(deltas, "wdt", "w"),
+                               mode=matmul_mode)
         cs_x, cs_bc = jnp.split(state["conv"], [di], axis=-1)
         x, cx = _causal_conv(x0, lp["conv_x_w"], lp["conv_x_b"], cs_x)
         bc, cbc = _causal_conv(bc0, lp["conv_bc_w"], lp["conv_bc_b"], cs_bc)
@@ -300,7 +311,8 @@ def block_decode(lp, h_in: jnp.ndarray, state: Dict, cfg: ModelConfig, *,
     else:
         zxbcdt = quant_dense.apply(lp["in_proj"], hn, policy=policy,
                                    role="hidden",
-                                   delta=_dget(deltas, "in_proj", "w"))
+                                   delta=_dget(deltas, "in_proj", "w"),
+                                   mode=matmul_mode)
         z, x, bc, dt = _split_proj(zxbcdt, cfg)
         xbc, conv_state = _causal_conv(jnp.concatenate([x, bc], axis=-1),
                                        lp["conv_w"], lp["conv_b"],
@@ -321,7 +333,8 @@ def block_decode(lp, h_in: jnp.ndarray, state: Dict, cfg: ModelConfig, *,
     y = y.reshape(bsz, 1, di).astype(h_in.dtype)
     y = rmsnorm(lp["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
     out = quant_dense.apply(lp["out_proj"], y, policy=policy, role="hidden",
-                            delta=_dget(deltas, "out_proj", "w"))
+                            delta=_dget(deltas, "out_proj", "w"),
+                            mode=matmul_mode)
     return h_in + out, {"ssm": s_new, "conv": conv_state}
 
 
@@ -330,31 +343,31 @@ def block_decode(lp, h_in: jnp.ndarray, state: Dict, cfg: ModelConfig, *,
 def forward(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
             remat: str = "layer", attn_chunk: int = 0,
-            chunk: int = DEFAULT_CHUNK) -> Tuple[jnp.ndarray, jnp.ndarray]:
+            chunk: int = DEFAULT_CHUNK,
+            matmul_mode: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
     h = embed_lookup(params["embed"], batch["tokens"], policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
     h = constrain(h, "act")
 
     def body(hh, xs):
         lp, ld = xs
-        return block_apply(lp, hh, cfg, policy=policy, deltas=ld, chunk=chunk), None
+        return block_apply(lp, hh, cfg, policy=policy, deltas=ld, chunk=chunk,
+                           matmul_mode=matmul_mode), None
 
     if remat != "none":
         body = jax.checkpoint(body, prevent_cse=False)
     ld = deltas.get("layers") if deltas else None
     h, _ = jax.lax.scan(body, h, (params["layers"], ld))
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    return _logits(params, h, cfg, policy, deltas), jnp.zeros((), jnp.float32)
+    return (_logits(params, h, cfg, policy, deltas, matmul_mode),
+            jnp.zeros((), jnp.float32))
 
 
-def _logits(params, h, cfg, policy, deltas):
-    if cfg.tie_embeddings:
-        out = embed_logits(params["embed"], h, policy=policy,
-                           delta=_dget(deltas, "embed", "w"))
-    else:
-        out = quant_dense.apply(params["head"], h, policy=policy, role="output",
-                                delta=_dget(deltas, "head", "w"))
-    return constrain(out.astype(jnp.float32), "logits")
+def _logits(params, h, cfg, policy, deltas, mm: str = "auto"):
+    return logits_readout(params, h, cfg, policy=policy,
+                          embed_delta=_dget(deltas, "embed", "w"),
+                          head_delta=_dget(deltas, "head", "w"),
+                          matmul_mode=mm)
 
 
 def init_state(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=jnp.bfloat16):
@@ -368,7 +381,8 @@ def init_state(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=jnp.bfloat1
 def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas=None, dtype=jnp.bfloat16, attn_chunk: int = 0,
             max_len: Optional[int] = None, chunk: int = DEFAULT_CHUNK,
-            lengths: Optional[jnp.ndarray] = None):
+            lengths: Optional[jnp.ndarray] = None,
+            matmul_mode: str = "auto"):
     """Prompt pass returning final logits + exact decode-ready state.
 
     ``lengths`` (B,) enables right-padded multi-request prefill: the SSD
@@ -383,7 +397,8 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     def body(hh, xs):
         lp, ld = xs
         out, st = block_apply(lp, hh, cfg, policy=policy, deltas=ld,
-                              chunk=chunk, return_state=True, lengths=lengths)
+                              chunk=chunk, return_state=True, lengths=lengths,
+                              matmul_mode=matmul_mode)
         return out, st
 
     ld = deltas.get("layers") if deltas else None
@@ -393,25 +408,27 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     else:
         h = h[:, -1:]
     hln = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = _logits(params, hln, cfg, policy, deltas)
+    logits = _logits(params, hln, cfg, policy, deltas, matmul_mode)
     clen = jnp.asarray(l, jnp.int32) if lengths is None else lengths
     return logits, {"layers": states, "len": clen}
 
 
 def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
-                policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16):
+                policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16,
+                matmul_mode: str = "auto"):
     h = embed_lookup(params["embed"], tokens, policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
 
     def body(hh, xs):
         lp, ld, st = xs
-        hh, st2 = block_decode(lp, hh, st, cfg, policy=policy, deltas=ld)
+        hh, st2 = block_decode(lp, hh, st, cfg, policy=policy, deltas=ld,
+                               matmul_mode=matmul_mode)
         return hh, st2
 
     ld = deltas.get("layers") if deltas else None
     h, new_layers = jax.lax.scan(body, h, (params["layers"], ld, state["layers"]))
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = _logits(params, h, cfg, policy, deltas)
+    logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
     return logits, {"layers": new_layers, "len": state["len"] + 1}
 
 

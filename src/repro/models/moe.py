@@ -8,6 +8,13 @@ sharding. Dropping beyond capacity, standard aux load-balancing loss.
 Quantization: expert up/gate/down weights carry role 'hidden' (W3 under the
 paper's policy); the router is small and sensitive — role 'router' (W8),
 mirroring the paper's 8-bit output layer.
+
+Serve forms route through the unified kernel dispatch: the router (2D) goes
+through ``quant_dense.apply``; the 3D expert tensors ('kernel' mode) are
+swept with one Pallas qmatmul per expert under ``lax.map`` — the weight is
+expanded only in VMEM — while 'dequant' mode matmuls the int8 levels in the
+activation dtype and rescales the OUTPUT buffer by delta, so neither mode
+materializes a dequantized expert matrix.
 """
 from __future__ import annotations
 
@@ -41,14 +48,35 @@ def moe_init(key, cfg: ModelConfig, dtype=jnp.float32) -> Dict[str, Any]:
     return p
 
 
-def _expert_weight(params, name, policy: QuantPolicy, deltas) -> jnp.ndarray:
+def _expert_matmul(params, name, buf: jnp.ndarray, policy: QuantPolicy,
+                   deltas, mm: str) -> jnp.ndarray:
+    """buf (ng, E, C, K) x expert stack (E, K, F) -> (ng, E, C, F), weight-
+    form aware. Serve forms never materialize a dequantized expert matrix."""
+    leaf = params[name]
+    if isinstance(leaf, dict) and "q" in leaf:
+        q, delta = leaf["q"], leaf["delta"]          # (E, K, F), (E, 1, F)
+        e = q.shape[0]
+        if quant_dense.resolve_matmul_mode(mm) == "kernel":
+            from repro.kernels.qmatmul import ops as qmm_ops
+            ng, _, cap, k = buf.shape
+            xb = buf.transpose(1, 0, 2, 3).reshape(e, ng * cap, k)
+            # delta may be per-layer (1, 1, F) or per-expert (E, 1, F)
+            de = jnp.broadcast_to(delta, (e, 1, q.shape[-1]))
+            y = jax.lax.map(
+                lambda ex: qmm_ops.qmatmul(ex[0], ex[1], ex[2].reshape(-1)),
+                (xb, q, de))
+            return y.reshape(e, ng, cap, -1).transpose(1, 0, 2, 3)
+        acc = jnp.einsum("necd,edf->necf", buf, q.astype(buf.dtype),
+                         preferred_element_type=jnp.float32)
+        return (acc * delta[None].astype(jnp.float32)).astype(buf.dtype)
     d = ((deltas or {}).get(name) or {}).get("w") if deltas else None
-    return quant_dense.effective_weight(params[name], policy, "hidden", d)
+    w = quant_dense.effective_weight(leaf, policy, "hidden", d)
+    return jnp.einsum("necd,edf->necf", buf, w.astype(buf.dtype))
 
 
 def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
               policy: QuantPolicy, deltas: Optional[Dict] = None,
-              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+              matmul_mode: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
     b, s, d = x.shape
     e, k = cfg.num_experts, cfg.experts_per_token
@@ -59,10 +87,18 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
         g = t
     xg = x.reshape(ng, g, d)
 
-    rd = ((deltas or {}).get("router") or {}).get("w") if deltas else None
-    wr = quant_dense.effective_weight(params["router"], policy, "router", rd)
-    logits = jnp.einsum("ngd,de->nge", xg, wr.astype(x.dtype),
-                        preferred_element_type=jnp.float32)
+    if isinstance(params["router"], dict) and "q" in params["router"]:
+        # out_dtype=fp32: the router is the 'small and sensitive' component —
+        # rounding its logits through bf16 activations could flip near-tie
+        # top_k routing vs the float-weight branch below
+        logits = quant_dense.serve_apply(params["router"], xg,
+                                         mode=matmul_mode,
+                                         out_dtype=jnp.float32)
+    else:
+        rd = ((deltas or {}).get("router") or {}).get("w") if deltas else None
+        wr = quant_dense.effective_weight(params["router"], policy, "router", rd)
+        logits = jnp.einsum("ngd,de->nge", xg, wr.astype(x.dtype),
+                            preferred_element_type=jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)                     # (ng,g,E) fp32
     top_p, top_i = jax.lax.top_k(probs, k)                      # (ng,g,k)
     top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
@@ -91,15 +127,13 @@ def moe_apply(params: Dict[str, Any], x: jnp.ndarray, cfg: ModelConfig, *,
     buf = constrain(buf, "moe_buffer")
 
     act = act_fn(cfg.mlp_act)
-    w_up = _expert_weight(params, "up", policy, deltas).astype(x.dtype)
-    w_dn = _expert_weight(params, "down", policy, deltas).astype(x.dtype)
-    h = jnp.einsum("necd,edf->necf", buf, w_up)
+    h = _expert_matmul(params, "up", buf, policy, deltas, matmul_mode)
     if "gate" in params:
-        w_gt = _expert_weight(params, "gate", policy, deltas).astype(x.dtype)
-        h = act(jnp.einsum("necd,edf->necf", buf, w_gt)) * h
+        hg = _expert_matmul(params, "gate", buf, policy, deltas, matmul_mode)
+        h = act(hg) * h
     else:
         h = act(h)
-    out_buf = jnp.einsum("necf,efd->necd", h, w_dn)
+    out_buf = _expert_matmul(params, "down", h, policy, deltas, matmul_mode)
     out_buf = constrain(out_buf, "moe_buffer")
 
     yk = jnp.einsum("nte,ned->ntd", comb.reshape(ng, k * g, e * cap),

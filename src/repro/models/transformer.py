@@ -26,8 +26,8 @@ from repro.distributed.context import constrain
 from repro.models import moe as moe_mod
 from repro.models.attention import (chunked_attention, decode_attention,
                                     sliding_window_attention)
-from repro.models.layers import (apply_rope, embed_init, embed_logits,
-                                 embed_lookup, head_rmsnorm, mlp_apply,
+from repro.models.layers import (apply_rope, embed_init, embed_lookup,
+                                 head_rmsnorm, logits_readout, mlp_apply,
                                  mlp_init, rmsnorm, rmsnorm_init, rope_freqs)
 
 __all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
@@ -85,15 +85,16 @@ def _dget(deltas, *names):
     return node
 
 
-def _qkv(lp, h, cfg: ModelConfig, policy, deltas, positions, inv_freq):
+def _qkv(lp, h, cfg: ModelConfig, policy, deltas, positions, inv_freq,
+         mm: str = "auto"):
     b, s, _ = h.shape
     hd = cfg.head_dim
     q = quant_dense.apply(lp["attn"]["wq"], h, policy=policy, role="hidden",
-                          delta=_dget(deltas, "attn", "wq", "w"))
+                          delta=_dget(deltas, "attn", "wq", "w"), mode=mm)
     k = quant_dense.apply(lp["attn"]["wk"], h, policy=policy, role="hidden",
-                          delta=_dget(deltas, "attn", "wk", "w"))
+                          delta=_dget(deltas, "attn", "wk", "w"), mode=mm)
     v = quant_dense.apply(lp["attn"]["wv"], h, policy=policy, role="hidden",
-                          delta=_dget(deltas, "attn", "wv", "w"))
+                          delta=_dget(deltas, "attn", "wv", "w"), mode=mm)
     q = q.reshape(b, s, cfg.num_heads, hd)
     k = k.reshape(b, s, cfg.num_kv_heads, hd)
     v = v.reshape(b, s, cfg.num_kv_heads, hd)
@@ -105,36 +106,36 @@ def _qkv(lp, h, cfg: ModelConfig, policy, deltas, positions, inv_freq):
     return q, k, v
 
 
-def _attn_out(lp, o, cfg, policy, deltas, b, s):
+def _attn_out(lp, o, cfg, policy, deltas, b, s, mm: str = "auto"):
     o = o.reshape(b, s, cfg.num_heads * cfg.head_dim)
     return quant_dense.apply(lp["attn"]["wo"], o, policy=policy, role="hidden",
-                             delta=_dget(deltas, "attn", "wo", "w"))
+                             delta=_dget(deltas, "attn", "wo", "w"), mode=mm)
 
 
-def _ffn(lp, h, cfg: ModelConfig, policy, deltas):
+def _ffn(lp, h, cfg: ModelConfig, policy, deltas, mm: str = "auto"):
     """Returns (out, aux_loss)."""
     if cfg.family == "moe":
         return moe_mod.moe_apply(lp["moe"], h, cfg, policy=policy,
-                                 deltas=_dget(deltas, "moe"))
+                                 deltas=_dget(deltas, "moe"), matmul_mode=mm)
     out = mlp_apply(lp["mlp"], h, act=cfg.mlp_act, policy=policy,
-                    deltas=_dget(deltas, "mlp"))
+                    deltas=_dget(deltas, "mlp"), matmul_mode=mm)
     return out, jnp.zeros((), jnp.float32)
 
 
 def _layer_forward(lp, ld, h, cfg: ModelConfig, policy, positions, inv_freq,
-                   attn_chunk: int):
+                   attn_chunk: int, mm: str = "auto"):
     b, s, _ = h.shape
     hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
-    q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq)
+    q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq, mm)
     if cfg.sliding_window:
         o = sliding_window_attention(q, k, v, window=cfg.sliding_window,
                                      chunk=min(attn_chunk, s))
     else:
         o = chunked_attention(q, k, v, causal=True, chunk=min(attn_chunk, s))
-    h = h + _attn_out(lp, o, cfg, policy, ld, b, s)
+    h = h + _attn_out(lp, o, cfg, policy, ld, b, s, mm)
     h = constrain(h, "act")
     hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
-    f, aux = _ffn(lp, hn, cfg, policy, ld)
+    f, aux = _ffn(lp, hn, cfg, policy, ld, mm)
     h = constrain(h + f, "act")
     return h, aux, (k, v)
 
@@ -156,6 +157,7 @@ def forward(params: Dict[str, Any], batch: Dict[str, jnp.ndarray],
             cfg: ModelConfig, *, policy: QuantPolicy,
             deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
             remat: str = "layer", attn_chunk: int = 1024,
+            matmul_mode: str = "auto",
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Training/eval forward. Returns (logits (B,S,V) fp32, aux_loss)."""
     h = _embed_input(params, batch, cfg, policy, deltas, dtype)
@@ -168,7 +170,7 @@ def forward(params: Dict[str, Any], batch: Dict[str, jnp.ndarray],
         hh, aux = carry
         lp, ld = xs
         hh, a, _ = _layer_forward(lp, ld, hh, cfg, policy, positions, inv_freq,
-                                  attn_chunk)
+                                  attn_chunk, matmul_mode)
         return (hh, aux + a), None
 
     if remat != "none":
@@ -177,18 +179,15 @@ def forward(params: Dict[str, Any], batch: Dict[str, jnp.ndarray],
     (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
                                (params["layers"], ld))
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = _logits(params, h, cfg, policy, deltas)
+    logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
     return logits, aux
 
 
-def _logits(params, h, cfg, policy, deltas):
-    if cfg.tie_embeddings:
-        out = embed_logits(params["embed"], h, policy=policy,
-                           delta=_dget(deltas, "embed", "w"))
-    else:
-        out = quant_dense.apply(params["head"], h, policy=policy, role="output",
-                                delta=_dget(deltas, "head", "w"))
-    return constrain(out.astype(jnp.float32), "logits")
+def _logits(params, h, cfg, policy, deltas, mm: str = "auto"):
+    return logits_readout(params, h, cfg, policy=policy,
+                          embed_delta=_dget(deltas, "embed", "w"),
+                          head_delta=_dget(deltas, "head", "w"),
+                          matmul_mode=mm)
 
 
 # --- serving: prefill + decode ------------------------------------------------------
@@ -228,7 +227,8 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas: Optional[Dict] = None, dtype=jnp.bfloat16,
             attn_chunk: int = 1024, max_len: Optional[int] = None,
             quantize_cache: bool = False,
-            lengths: Optional[jnp.ndarray] = None):
+            lengths: Optional[jnp.ndarray] = None,
+            matmul_mode: str = "auto"):
     """Run the prompt, build the KV cache. Returns (last_logits, cache).
 
     ``lengths`` (B,) enables right-padded multi-request prefill: row ``i``
@@ -252,7 +252,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     def body(hh, xs):
         lp, ld = xs
         hh, _, (k, v) = _layer_forward(lp, ld, hh, cfg, policy, positions,
-                                       inv_freq, attn_chunk)
+                                       inv_freq, attn_chunk, matmul_mode)
         # keep last `cs` positions (ring-start for SWA, whole seq otherwise)
         return hh, (k[:, -cs:], v[:, -cs:])
 
@@ -264,7 +264,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     else:
         h = h[:, -1:]
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = _logits(params, h, cfg, policy, deltas)
+    logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
     if cs > ks.shape[2]:
         padw = cs - ks.shape[2]
         ks = jnp.pad(ks, ((0, 0), (0, 0), (0, padw), (0, 0), (0, 0)))
@@ -286,7 +286,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
                 policy: QuantPolicy, deltas: Optional[Dict] = None,
-                dtype=jnp.bfloat16):
+                dtype=jnp.bfloat16, matmul_mode: str = "auto"):
     """One token for the whole batch. tokens: (B, 1) int32.
 
     Returns (logits (B,1,V), new_cache). The KV cache is a ring buffer for
@@ -316,7 +316,8 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
             lp, ld, kc, vc = xs
             ks_ = vs_ = None
         hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
-        q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq)
+        q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq,
+                       matmul_mode)
         if quantized:
             kq, ksc = _quantize_kv(k)
             vq, vsc = _quantize_kv(v)
@@ -329,9 +330,9 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
             vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
         valid = jnp.minimum(pos + 1, cs)
         o = decode_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_)
-        hh = hh + _attn_out(lp, o, cfg, policy, ld, b, 1)
+        hh = hh + _attn_out(lp, o, cfg, policy, ld, b, 1, matmul_mode)
         hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
-        f, _ = _ffn(lp, hn, cfg, policy, ld)
+        f, _ = _ffn(lp, hn, cfg, policy, ld, matmul_mode)
         out = (hh + f, (kc, vc, ks_, vs_) if quantized else (kc, vc))
         return out
 
@@ -347,7 +348,7 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
                                              cache["v"]))
         new_cache = {"k": ks, "v": vs, "len": cache["len"] + 1}
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-    logits = _logits(params, h, cfg, policy, deltas)
+    logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
     return logits, new_cache
 
 

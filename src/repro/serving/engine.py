@@ -35,13 +35,22 @@ every ``drain_every`` ticks — the async window: larger values sync less
 often but hold more pending per-tick records; with EOS enabled the periodic
 drain is also what discovers early-freed slots.
 
-Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows,
-and dynamic activation scales (``policy.act_bits``) are per-tensor — under
-either, a slot's tokens can depend on what else is in the batch (this now
-includes the admission batch: bucketed prefill runs requests and padding
-rows together). Dense/ssm/hybrid decode AND batched prefill with
-weight-only quantization are row-independent and therefore token-identical
-to single-request ``generate``.
+Quantized matmuls follow ``matmul_mode``: 'kernel' routes every serve-form
+(``q``/``qp``) weight through the Pallas qmatvec/qmatmul kernels (weights
+expanded only in VMEM — interpret mode off-TPU, for tests), 'dequant' uses
+the fused levels-matmul fallback, 'auto' (default) picks 'kernel' on TPU.
+In no serve mode does the decode graph materialize a dequantized weight
+matrix.
+
+Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows
+— a slot's tokens can depend on what else is in the batch. Dynamic
+activation scales (``policy.act_bits``) are per-ROW (each batch row gets
+its own absmax), so decode ticks are row-independent; batched-prefill
+parity under act quant additionally requires the prompt to land exactly on
+its admission bucket (padding positions inside a row enter that row's
+absmax). Dense/ssm/hybrid decode AND batched prefill with weight-only
+quantization are row-independent and therefore token-identical to
+single-request ``generate``.
 """
 from __future__ import annotations
 
@@ -72,14 +81,14 @@ def _sample(key, logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
 def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
              policy: QuantPolicy, deltas=None, max_new_tokens: int = 32,
              temperature: float = 0.0, seed: int = 0,
-             dtype=jnp.bfloat16) -> jnp.ndarray:
+             dtype=jnp.bfloat16, matmul_mode: str = "auto") -> jnp.ndarray:
     """prompts (B, P) int32 -> (B, P + max_new_tokens). jit-compiled decode."""
     mod = get_model(cfg)
     b, p = prompts.shape
     max_len = p + max_new_tokens
     logits, cache = mod.prefill(params, {"tokens": prompts}, cfg,
                                 policy=policy, deltas=deltas, dtype=dtype,
-                                max_len=max_len)
+                                max_len=max_len, matmul_mode=matmul_mode)
     # independent streams: k0 samples the prefill token, the rest drive the
     # scan (sampling with `key` AND scanning over split(key, n) would reuse
     # the same randomness for tok0 and step 0)
@@ -92,7 +101,8 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
     def step(carry, k):
         cache, tok = carry
         logits, cache = mod.decode_step(params, cache, tok, cfg, policy=policy,
-                                        deltas=deltas, dtype=dtype)
+                                        deltas=deltas, dtype=dtype,
+                                        matmul_mode=matmul_mode)
         nxt = _sample(k, logits[:, 0], temperature)[:, None].astype(jnp.int32)
         return (cache, nxt), nxt
 
@@ -134,7 +144,12 @@ class ServingEngine:
                  deltas=None, slots: int = 8, max_len: int = 512,
                  dtype=jnp.bfloat16, temperature: float = 0.0,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 drain_every: int = 4):
+                 drain_every: int = 4, matmul_mode: str = "auto",
+                 profile: bool = False):
+        from repro.core.quant_dense import MATMUL_MODES
+        if matmul_mode not in MATMUL_MODES:
+            raise ValueError(f"matmul_mode must be one of {MATMUL_MODES}, "
+                             f"got {matmul_mode!r}")
         self.params, self.cfg, self.policy = params, cfg, policy
         self.deltas, self.dtype = deltas, dtype
         self.mod = get_model(cfg)
@@ -142,6 +157,7 @@ class ServingEngine:
         self.temperature = temperature
         self.eos_id = eos_id
         self.drain_every = max(1, drain_every)
+        self.matmul_mode = matmul_mode
         # shared slot-major cache, allocated ONCE
         self.cache = model_api.init_cache(cfg, slots, max_len, dtype,
                                           per_slot_len=True)
@@ -173,12 +189,36 @@ class ServingEngine:
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(1,))
         self._admit_many_fn = jax.jit(self._admit_many, donate_argnums=(0,))
         self._prefill_fn = jax.jit(self._prefill)
+        # optional phase timers: wall-clock split between admission (prefill)
+        # and decode ticks, for benchmarks. Wrapping blocks on each call's
+        # result, so it trades a little async overlap for attribution —
+        # off by default.
+        self.prefill_secs = 0.0
+        self.decode_secs = 0.0
+        if profile:
+            self._tick_fn = self._timed(self._tick_fn, "decode_secs")
+            self._prefill_fn = self._timed(self._prefill_fn, "prefill_secs")
+            self._admit_fn = self._timed(self._admit_fn, "prefill_secs")
+            self._admit_many_fn = self._timed(self._admit_many_fn,
+                                              "prefill_secs")
+
+    def _timed(self, fn, attr: str):
+        import time
+
+        def wrapped(*a, **kw):
+            t0 = time.perf_counter()
+            out = jax.block_until_ready(fn(*a, **kw))
+            setattr(self, attr,
+                    getattr(self, attr) + time.perf_counter() - t0)
+            return out
+        return wrapped
 
     # --- jitted graph builders (self.mod looked up at trace time so tests can
     # --- instrument the family module's decode_step) ------------------------
 
     def _mkw(self) -> Dict[str, Any]:
-        return dict(policy=self.policy, deltas=self.deltas, dtype=self.dtype)
+        return dict(policy=self.policy, deltas=self.deltas, dtype=self.dtype,
+                    matmul_mode=self.matmul_mode)
 
     def _eos(self) -> int:
         return -1 if self.eos_id is None else int(self.eos_id)  # -1 never hits

@@ -17,14 +17,19 @@ from repro.models import get_model
 from repro.models import api as model_api
 from repro.serving.engine import ServingEngine, generate
 
-# weight-only W3: dynamic activation scales are per-tensor (batch-coupled),
-# so exact cross-batch-size parity needs act_bits=None (see
-# test_decode_consistency for the same reasoning)
+# weight-only W3 for the form sweep; full W3A8 (dynamic 8-bit act scales) is
+# exercised separately below — scales are per-ROW since the kernel-dispatch
+# PR, so act quant no longer couples batch rows
 W3 = dataclasses.replace(W3A8, act_bits=None)
 
 ARCH_FOR = {"dense": "qwen2-1.5b", "ssm": "mamba2-2.7b",
             "hybrid": "zamba2-1.2b"}
 PROMPT = [1, 2, 3, 4]
+# == the smallest admission bucket (engine._MIN_BUCKET): batched prefill
+# adds no intra-row padding, so a row's dynamic act absmax sees exactly the
+# tokens the solo run sees (padding POSITIONS inside a row would enter its
+# per-row scale; padding ROWS never do)
+PROMPT_BUCKET = [1, 2, 3, 4, 5, 6, 7, 8]
 
 
 def _setup(family, form):
@@ -59,6 +64,32 @@ def test_engine_matches_generate(family, form):
     assert len(done) == 4 and all(r.done for r in done)
     for r in done:
         assert r.out == ref, (family, form, r.out, ref)
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_engine_matches_generate_act_bits(family):
+    """Full W3A8 (dynamic 8-bit activation scales): per-ROW scales keep
+    slots independent, so engine tokens == solo generate even under act
+    quant — including a late wave admitted mid-decode next to busy slots.
+    Prompts sit exactly on the admission bucket (see PROMPT_BUCKET)."""
+    layers = 4 if family == "hybrid" else 2
+    cfg = reduced(get_config(ARCH_FOR[family]), layers=layers, d_model=32,
+                  vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    sp = quant_dense.export_container(params, W3A8)
+    out = generate(sp, jnp.asarray([PROMPT_BUCKET], jnp.int32), cfg,
+                   policy=W3A8, max_new_tokens=5, dtype=jnp.float32)
+    ref = [int(t) for t in np.asarray(out[0, len(PROMPT_BUCKET):])]
+    eng = ServingEngine(sp, cfg, policy=W3A8, slots=3, max_len=32,
+                        dtype=jnp.float32)
+    for _ in range(3):
+        eng.submit(PROMPT_BUCKET, max_new=5)
+    eng.step(); eng.step()                  # first wave mid-decode...
+    eng.submit(PROMPT_BUCKET, max_new=5)    # ...second wave rides along
+    done = eng.run_all()
+    assert len(done) == 4 and all(r.done for r in done)
+    for r in done:
+        assert r.out == ref, (family, r.out, ref)
 
 
 @pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])

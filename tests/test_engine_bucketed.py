@@ -5,8 +5,11 @@ mixed-length batched prefill is token-exact vs single-request ``generate``
 in all three families — including under staggered mid-decode admission.
 
 Weight-only policies (``act_bits=None``) throughout: dynamic activation
-scales are per-tensor, which couples batch rows and breaks exact
-cross-batch-size parity (see test_engine_batched.py for the same rule).
+scales are per-ROW (slots are independent), but a padded prefill row's
+absmax still sees its padding positions, so exact parity under act quant
+needs bucket-aligned prompts — mixed off-bucket lengths are this file's
+whole point, hence weight-only here (the act-quant parity case lives in
+test_engine_batched.py::test_engine_matches_generate_act_bits).
 """
 import dataclasses
 

@@ -1,0 +1,188 @@
+"""The unified kernel dispatch (quant_dense.serve_apply / models
+``matmul_mode``): kernel-path numerics match the dequant fallback and the
+``effective_weight`` oracle, kernel-path decode is TOKEN-IDENTICAL to the
+dequant path for every family x serve form, and — the tentpole invariant —
+the jitted decode graph in 'kernel' mode contains NO dequantized full-size
+weight matrix (asserted on the jaxpr; the Pallas calls carry the matmuls)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.packing import pack_matrix
+from repro.core.precision import W3A8
+from repro.core.treeutil import flatten_with_path, role_of
+from repro.models import api as model_api
+from repro.models import get_model
+from repro.serving.engine import generate
+
+W3 = dataclasses.replace(W3A8, act_bits=None)
+
+ARCH_FOR = {"dense": "qwen2-1.5b", "moe": "phi3.5-moe-42b-a6.6b",
+            "ssm": "mamba2-2.7b", "hybrid": "zamba2-1.2b"}
+PROMPT = [1, 2, 3, 4]
+
+
+def _setup(family, form):
+    layers = 4 if family == "hybrid" else 2
+    cfg = reduced(get_config(ARCH_FOR[family]), layers=layers, d_model=32,
+                  vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    export = (quant_dense.export_levels if form == "q"
+              else quant_dense.export_container)
+    return cfg, export(params, W3), params
+
+
+# --- serve_apply unit parity ------------------------------------------------------
+
+def _leaf(form, k=48, n=40, bias=True, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.randint(ks[0], (k, n), -3, 4, jnp.int8)
+    d = jnp.abs(jax.random.normal(ks[1], (n,))) * 0.1 + 0.01
+    leaf = {"delta": d.reshape(1, n)}
+    if form == "qp":
+        leaf["qp"] = pack_matrix(q, 3)
+    else:
+        leaf["q"] = q
+    if bias:
+        leaf["b"] = jax.random.normal(ks[2], (n,)) * 0.1
+    return leaf
+
+
+@pytest.mark.parametrize("bias", [True, False])
+@pytest.mark.parametrize("form", ["q", "qp"])
+def test_serve_apply_kernel_matches_dequant_and_oracle(form, bias):
+    leaf = _leaf(form, bias=bias)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 48))
+    out_k = quant_dense.serve_apply(leaf, x, mode="kernel", interpret=True)
+    out_d = quant_dense.serve_apply(leaf, x, mode="dequant")
+    w = quant_dense.effective_weight(leaf, W3A8, "hidden", k=48)
+    oracle = x @ w.astype(x.dtype)
+    if bias:
+        oracle = oracle + leaf["b"]
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_d),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tied_logits_matches_dequant_readout():
+    """(h * delta) @ q^T == h @ (q * delta)^T, kernel and fused paths."""
+    v, d = 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    table = {"q": jax.random.randint(ks[0], (v, d), -127, 128, jnp.int8),
+             "delta": (jnp.abs(jax.random.normal(ks[1], (d,))) * 0.01
+                       + 1e-3).reshape(1, d)}
+    h = jax.random.normal(ks[2], (3, 1, d))
+    oracle = h @ (table["q"].astype(jnp.float32) * table["delta"]).T
+    for mode in ("kernel", "dequant"):
+        out = quant_dense.tied_logits(table, h, mode=mode,
+                                      interpret=mode == "kernel")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_resolve_matmul_mode():
+    assert quant_dense.resolve_matmul_mode("kernel") == "kernel"
+    assert quant_dense.resolve_matmul_mode("dequant") == "dequant"
+    assert quant_dense.resolve_matmul_mode("auto") in ("kernel", "dequant")
+    with pytest.raises(ValueError):
+        quant_dense.resolve_matmul_mode("nope")
+
+
+# --- per-family token parity ------------------------------------------------------
+
+@pytest.mark.parametrize("form", ["q", "qp"])
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
+def test_kernel_decode_tokens_match_dequant(family, form):
+    """Greedy decode through models/api.py must be token-identical between
+    the Pallas kernel path (interpret mode) and the dequant fallback."""
+    cfg, sp, _ = _setup(family, form)
+    prompts = jnp.asarray([PROMPT], jnp.int32)
+    out_k = generate(sp, prompts, cfg, policy=W3, max_new_tokens=3,
+                     dtype=jnp.float32, matmul_mode="kernel")
+    out_d = generate(sp, prompts, cfg, policy=W3, max_new_tokens=3,
+                     dtype=jnp.float32, matmul_mode="dequant")
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_d),
+                                  err_msg=f"{family}/{form}")
+
+
+# --- the tentpole invariant: no dequantized weight in the decode graph ------------
+
+def _forbidden_shapes(float_params, policy):
+    """Shapes a dequantized weight matrix would have in the decode graph:
+    each quantizable leaf's full (stacked) shape and its per-layer slice."""
+    shapes = set()
+    for path, leaf in flatten_with_path(float_params).items():
+        if not (path.endswith("/w") or path == "w"):
+            continue
+        if policy.spec_for(role_of(path)) is None:
+            continue
+        nd = quant_dense._stacked_dims(path)
+        shapes.add(tuple(leaf.shape))
+        shapes.add(tuple(leaf.shape[nd:]))
+    return shapes
+
+
+def _float_shapes_outside_pallas(jaxpr):
+    """All float-dtype result shapes in the graph, NOT descending into
+    pallas_call bodies (their VMEM tiles are the point of the kernel).
+    Returns (float_shapes, saw_pallas)."""
+    from jax.core import ClosedJaxpr, Jaxpr
+
+    def subjaxprs(val):
+        if isinstance(val, ClosedJaxpr):
+            yield val.jaxpr
+        elif isinstance(val, Jaxpr):
+            yield val
+        elif isinstance(val, (tuple, list)):
+            for v in val:
+                yield from subjaxprs(v)
+
+    shapes, saw = set(), [False]
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                saw[0] = True
+                continue
+            for v in eqn.outvars:
+                aval = v.aval
+                if (hasattr(aval, "dtype")
+                        and jnp.issubdtype(aval.dtype, jnp.floating)):
+                    shapes.add(tuple(aval.shape))
+            for val in eqn.params.values():
+                for sub in subjaxprs(val):
+                    walk(sub)
+
+    walk(jaxpr.jaxpr if isinstance(jaxpr, ClosedJaxpr) else jaxpr)
+    return shapes, saw[0]
+
+
+@pytest.mark.parametrize("form", ["q", "qp"])
+@pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
+def test_kernel_mode_decode_graph_has_no_dequantized_weight(family, form):
+    cfg, sp, float_params = _setup(family, form)
+    forbidden = _forbidden_shapes(float_params, W3)
+    cache = model_api.init_cache(cfg, 2, 16, jnp.float32, per_slot_len=True)
+    toks = jnp.zeros((2, 1), jnp.int32)
+
+    def run(mode):
+        fn = lambda c, t: model_api.decode_step(
+            sp, c, t, cfg, policy=W3, dtype=jnp.float32, matmul_mode=mode)
+        return jax.make_jaxpr(fn)(cache, toks)
+
+    shapes_k, saw_pallas = _float_shapes_outside_pallas(run("kernel"))
+    hit_k = shapes_k & forbidden
+    assert saw_pallas, "kernel mode must lower to pallas_call"
+    assert not hit_k, (f"{family}/{form}: dequantized weight shapes "
+                      f"{hit_k} materialized in kernel-mode decode graph")
+    # detector sanity: the dequant fallback DOES build per-layer (K, N)
+    # float operands (levels cast to the activation dtype), so the same
+    # check must trip there — otherwise the assertion above is vacuous
+    shapes_d, _ = _float_shapes_outside_pallas(run("dequant"))
+    assert shapes_d & forbidden, "shape detector lost its reference signal"

@@ -96,6 +96,46 @@ class TestQMatvec:
         assert wp.nbytes * 8 / (k * n) == pytest.approx(3.2, rel=0.01)
 
 
+class TestFusedBias:
+    """Batched decode/prefill shapes with the bias fused into the kernel
+    epilogue, checked against the dequantized ``effective_weight`` oracle
+    (the serve-path correctness bar)."""
+
+    def _oracle(self, x, leaf):
+        from repro.core import quant_dense
+        from repro.core.precision import W3A8
+        w = quant_dense.effective_weight(leaf, W3A8, "hidden", k=x.shape[-1])
+        return x @ w.astype(x.dtype) + leaf["b"]
+
+    @pytest.mark.parametrize("b", [2, 8, 128])      # decode + prefill shapes
+    def test_qmatvec_batched_with_bias_vs_effective_weight(self, b):
+        k, n = 100, 64
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        x = _rand(ks[0], (b, k), jnp.float32)
+        q = jax.random.randint(ks[1], (k, n), -3, 4, jnp.int8)
+        d = jnp.abs(_rand(ks[2], (n,), jnp.float32)) * 0.1 + 0.01
+        bias = _rand(ks[3], (n,), jnp.float32)
+        leaf = {"qp": pack_matrix(q, 3), "delta": d.reshape(1, n), "b": bias}
+        out = qmatvec(x, leaf["qp"], d, k=k, bias=bias, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(self._oracle(x, leaf)),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("b", [8, 128])
+    def test_qmatmul_levels_with_bias_vs_effective_weight(self, b):
+        k, n = 100, 64
+        ks = jax.random.split(jax.random.PRNGKey(4), 4)
+        x = _rand(ks[0], (b, k), jnp.float32)
+        q = jax.random.randint(ks[1], (k, n), -3, 4, jnp.int8)
+        d = jnp.abs(_rand(ks[2], (n,), jnp.float32)) * 0.1 + 0.01
+        bias = _rand(ks[3], (n,), jnp.float32)
+        leaf = {"q": q, "delta": d.reshape(1, n), "b": bias}
+        out = qmatmul(x, q, d, bias=bias, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(self._oracle(x, leaf)),
+                                   rtol=1e-4, atol=1e-4)
+
+
 class TestSigmoidPW:
     def test_vs_ref_and_exact(self):
         x = jnp.linspace(-8, 8, 1000)

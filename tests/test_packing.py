@@ -66,6 +66,24 @@ def test_out_of_range_levels_rejected():
     packing.pack_matrix(jnp.array([[-2], [1]], jnp.int32), 2)
 
 
+def test_out_of_range_check_on_concrete_stacked_levels():
+    """Under vmap/jit the levels are tracers and pack_matrix's own check
+    cannot see them (it returns early) — the stacked-layer export path must
+    therefore run the check on the CONCRETE stacked array before vmapping
+    (quant_dense.export_container does). Pin both halves of that contract."""
+    import jax
+    import pytest
+
+    bad = jnp.full((2, 4, 2), 9, jnp.int32)
+    # the vmapped pack silently truncates (tracer: check unreachable)...
+    packed = jax.vmap(lambda m: packing.pack_matrix(m, 3))(bad)
+    back = jax.vmap(lambda w: packing.unpack_matrix(w, 4, 3))(packed)
+    assert int(back[0, 0, 0]) != 9            # 9 -> low 3 bits = 1
+    # ...so the concrete pre-check is what guards the export path
+    with pytest.raises(ValueError, match="out of range"):
+        packing._check_levels(bad, 3)
+
+
 def test_packed_nbytes_compression():
     # 3M weights (paper digit net): packed ~1.2MB vs 11.6MB float32
     n = 2_903_512

@@ -21,6 +21,12 @@ V5E_HBM = 819e9  # B/s
 #       (Pallas qmatvec — the paper's BRAM image) 0.4  (= 3.2 bits)
 SERVE_FORM_BYTES = {"w": 2.0, "q": 1.0, "qp": 0.4}
 
+# decode's OTHER HBM stream: per generated token, attention re-reads every
+# valid cache position — context_len * kv_bytes_per_token per step. The
+# engine's kv_bits=8 form (int8 entries + 2 fp32 per-token scales per cache
+# layer, read by the fused attn_decode kernel) halves it vs bf16.
+KV_DECODE_CONTEXT = 4096
+
 
 def serve_form_table(arch: str = "qwen2-1.5b"):
     """Decode bandwidth bound per serve form: one full weight read per
@@ -54,6 +60,20 @@ def run():
                      1e6 / t["tok_per_s_per_chip"],
                      f"bytes_per_weight={t['bytes_per_weight']};"
                      f"tokens_per_s_per_chip={t['tok_per_s_per_chip']:.0f}"))
+
+    # --- KV-cache traffic (the engine's kv_bits axis) --------------------------
+    try:                       # package context (benchmarks/run.py) ...
+        from benchmarks.memory_footprint import kv_bytes_per_token
+    except ImportError:        # ... or run directly as a script
+        from memory_footprint import kv_bytes_per_token
+    for name, bits in (("bf16", 16), ("int8", 8)):
+        per_tok = kv_bytes_per_token(cfg, bits)
+        per_step = per_tok * KV_DECODE_CONTEXT           # read per decode step
+        rows.append((f"kv_cache.{cfg.name}.{name}",
+                     per_step / V5E_HBM * 1e6,           # us of HBM per step
+                     f"bytes_per_token={per_tok};"
+                     f"read_per_step_at_{KV_DECODE_CONTEXT}ctx_MB="
+                     f"{per_step / 2**20:.1f}"))
     return rows
 
 

@@ -1,7 +1,7 @@
 """Kernel micro-bench + interpret-mode regression gate for the serve-path
-matmuls.
+matmuls AND the fused decode-attention kernel.
 
-Two shape cases mirror the LM serve path exactly:
+Two matmul shape cases mirror the LM serve path exactly:
 
   decode    (B=slots, K) x (K, N)            — one engine tick
   prefill   (slots*bucket_len, K) x (K, N)   — one bucketed admission
@@ -17,10 +17,16 @@ and three implementations per case:
                   path; timed only with --smoke-size shapes (interpret is an
                   emulator, its timings are not meaningful)
 
-Every kernel case is PARITY-CHECKED against the dequantized
-``effective_weight`` oracle; any mismatch exits nonzero, which is the CI
-kernel-regression gate (`--smoke`). Results are written to a JSON artifact
-(default ``BENCH_kernels.json``) and archived next to BENCH_serving.json.
+The attention case mirrors one engine decode tick (B=slots rows at mixed
+valid lengths against a (B, S, KV, D) cache, bf16-class AND int8+scales):
+the fused ``kernels.attn_decode`` Pallas kernel (interpret mode) is
+parity-checked against BOTH its pure-jnp oracle (``attn_decode/ref.py``)
+and the production einsum path (``models.attention.decode_attention``).
+
+Every kernel case is PARITY-CHECKED; any mismatch exits nonzero, which is
+the CI kernel-regression gate (`--smoke`). Results are written to a JSON
+artifact (default ``BENCH_kernels.json``) and archived next to
+BENCH_serving.json.
 
     PYTHONPATH=src python benchmarks/kernels_bench.py           # timings
     PYTHONPATH=src python benchmarks/kernels_bench.py --smoke   # CI gate
@@ -44,6 +50,10 @@ from repro.kernels.qmatvec.ops import qmatvec
 # serve-path shapes: slots=8 decode tick, 8 slots x 16-token bucket prefill
 FULL_CASES = [("decode", 8, 1024, 1024), ("prefill", 8 * 16, 1024, 1024)]
 SMOKE_CASES = [("decode", 8, 96, 128), ("prefill", 8 * 16, 96, 128)]
+
+# attn_decode shapes: (B=slots, S cache, H heads, KV heads, D head_dim)
+ATTN_FULL = (8, 512, 8, 2, 64)
+ATTN_SMOKE = (8, 96, 8, 2, 16)
 
 
 def _time(fn, *args, reps=10):
@@ -80,6 +90,47 @@ def _parity(case, form, leaf, x, out):
     return {"case": f"{case}.{form}", "max_abs_err": err, "ok": ok}
 
 
+def attn_cases(smoke: bool = False):
+    """Fused decode-attention parity: kernel vs ref.py vs decode_attention,
+    bf16-class (f32 on CPU) and int8 cache, mixed per-row valid lengths."""
+    from repro.kernels.attn_decode.ops import attn_decode
+    from repro.kernels.attn_decode.ref import attn_decode_ref
+    from repro.models.attention import decode_attention
+    from repro.models.transformer import _quantize_kv
+
+    b, s, h, kv, d = ATTN_SMOKE if smoke else ATTN_FULL
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, s, kv, d))
+    vc = jax.random.normal(ks[2], (b, s, kv, d))
+    lens = (jnp.arange(b) * (s // b) % s + 1).astype(jnp.int32)  # mixed rows
+    kq, ksc = _quantize_kv(kc)
+    vq, vsc = _quantize_kv(vc)
+
+    rows, parity = [], []
+    reps = 3 if smoke else 10
+    shape = f"shape={b}x{s}x{h}x{kv}x{d}"
+    for name, args in (("bf16", (q, kc, vc, lens, None, None)),
+                       ("int8", (q, kq, vq, lens, ksc, vsc))):
+        f_kn = jax.jit(lambda *a: attn_decode(*a, interpret=True))
+        out = f_kn(*args)
+        ref = attn_decode_ref(*args)
+        ein = decode_attention(*args, mode="ref")
+        for oracle, o in (("ref", ref), ("einsum", ein)):
+            err = float(jnp.max(jnp.abs(out - o)))
+            ok = bool(np.allclose(np.asarray(out), np.asarray(o),
+                                  rtol=1e-4, atol=1e-4))
+            parity.append({"case": f"attn_decode.{name}.vs_{oracle}",
+                           "max_abs_err": err, "ok": ok})
+        f_ref = jax.jit(lambda *a: decode_attention(*a, mode="ref"))
+        rows.append((f"kernel.cpu.attn_decode.{name}.einsum",
+                     _time(f_ref, *args, reps=reps), shape))
+        if smoke:
+            rows.append((f"kernel.cpu.attn_decode.{name}.kernel.interpret",
+                         _time(f_kn, *args, reps=reps), shape))
+    return rows, parity
+
+
 def run_cases(smoke: bool = False):
     rows, parity = [], []
     reps = 3 if smoke else 10
@@ -106,7 +157,8 @@ def run_cases(smoke: bool = False):
             if smoke:
                 rows.append((f"kernel.cpu.{case}.kernel.{form}.interpret",
                              _time(f_kn, x, reps=reps), shape))
-    return rows, parity
+    arows, aparity = attn_cases(smoke=smoke)
+    return rows + arows, parity + aparity
 
 
 def run(smoke: bool = True):

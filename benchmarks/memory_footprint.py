@@ -3,10 +3,35 @@
 The paper's question — "do the weights fit in on-chip memory?" — answered for
 (a) its own two nets vs the XC7Z045's 2.18MB BRAM, and (b) every assigned LM
 arch vs a v5e pod's aggregate VMEM/HBM per device on the 16x16 mesh.
+
+LM rows also report the serving-side analogue: decode HBM traffic is
+weights PLUS the KV cache, so each arch gets KV-cache bytes per token for
+the bf16 cache vs the engine's ``kv_bits=8`` form (int8 entries + one fp32
+k/v scale per layer-token) — the number that decides how many decode slots
+a fixed cache budget holds.
 """
 from __future__ import annotations
 
 from repro.configs import ARCH_IDS, get_config
+
+
+def kv_bytes_per_token(cfg, kv_bits: int = 16) -> int:
+    """KV-cache bytes appended per generated token.
+
+    Transformer-family archs write K+V per layer; hybrid writes one KV pair
+    per shared-attention application (num_layers // attn_every); ssm has no
+    KV cache. ``kv_bits=8`` is int8 entries + two fp32 per-token scales per
+    cache layer (k_scale, v_scale).
+    """
+    if cfg.family == "ssm":
+        return 0
+    layers = (cfg.num_layers // cfg.attn_every if cfg.family == "hybrid"
+              else cfg.num_layers)
+    hd = cfg.head_dim or cfg.d_model // cfg.num_heads
+    per_layer = 2 * cfg.num_kv_heads * hd                  # K + V entries
+    if kv_bits == 8:
+        return layers * (per_layer + 2 * 4)                # int8 + 2 scales
+    return layers * per_layer * kv_bits // 8
 
 BRAM_BYTES = 2.18 * 2**20            # XC7Z045 (paper §2.1)
 VMEM_BYTES = 16 * 2**20              # v5e per-chip VMEM class
@@ -48,23 +73,29 @@ def rows():
             "w3_per_dev_MB": w3_dev / 2**20,
             "fits_vmem_per_dev": w3_dev <= VMEM_BYTES,
             "fits_hbm_per_dev": w3_dev <= HBM_BYTES,
+            "kv_bf16_per_tok_B": kv_bytes_per_token(cfg, 16),
+            "kv_int8_per_tok_B": kv_bytes_per_token(cfg, 8),
         })
     return out
 
 
 def main():
     rs = rows()
-    print(f"{'net':28s} {'Mw':>8s} {'fp32MB':>8s} {'w8MB':>8s} {'w3MB':>8s}  verdict")
+    print(f"{'net':28s} {'Mw':>8s} {'fp32MB':>8s} {'w8MB':>8s} {'w3MB':>8s} "
+          f"{'kv16B/t':>8s} {'kv8B/t':>7s}  verdict")
     for r in rs:
         if "fits_bram_w3" in r:
+            kv = f"{'—':>8s} {'—':>7s}"
             v = (f"BRAM(2.18MB): w8={'FITS' if r['fits_bram_w8'] else 'NO'} "
                  f"w3={'FITS' if r['fits_bram_w3'] else 'NO'}  <- paper Table 1")
         else:
+            kv = (f"{r['kv_bf16_per_tok_B']:>8d} "
+                  f"{r['kv_int8_per_tok_B']:>7d}")
             v = (f"w3/dev={r['w3_per_dev_MB']:.0f}MB on 256 chips: "
                  f"VMEM={'FITS' if r['fits_vmem_per_dev'] else 'no'} "
                  f"HBM={'FITS' if r['fits_hbm_per_dev'] else 'NO'}")
         print(f"{r['net']:28s} {r['weights_M']:8.1f} {r['fp32_MB']:8.1f} "
-              f"{r['w8_MB']:8.1f} {r['w3_MB']:8.1f}  {v}")
+              f"{r['w8_MB']:8.1f} {r['w3_MB']:8.1f} {kv}  {v}")
     return rs
 
 

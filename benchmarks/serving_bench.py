@@ -21,7 +21,11 @@ engine's async-drain overlap for phase attribution; on CPU (effectively
 synchronous execution) the measured overhead is nil, but pass
 ``--no-profile`` to time the pure async path (no split in the artifact).
 ``--matmul-mode`` selects the quantized-matmul dispatch
-(auto/kernel/dequant; kernel is interpret-mode off-TPU).
+(auto/kernel/dequant; kernel is interpret-mode off-TPU), ``--attn-mode``
+the decode-attention dispatch (auto/kernel/ref — the fused Pallas
+``attn_decode`` kernel vs the einsum path), and ``--kv8`` serves from an
+int8 KV cache; every row reports the shared-cache bytes per slot, which
+kv8 halves (twice the slots per fixed cache budget).
 
 Results are also written as a JSON artifact (default ``BENCH_serving.json``)
 so CI can archive the perf trajectory.
@@ -59,21 +63,32 @@ def _prompts(requests: int):
 
 
 def _engine(params, cfg, policy, slots, max_new, matmul_mode="auto",
-            profile=True):
+            attn_mode="auto", kv_bits=None, profile=True):
     return ServingEngine(params, cfg, policy=policy, slots=slots,
                          max_len=MAX_PROMPT + max_new + 1,
                          dtype=jnp.float32, matmul_mode=matmul_mode,
+                         attn_mode=attn_mode, kv_bits=kv_bits,
                          profile=profile)
+
+
+def _cache_bytes_per_slot(eng: ServingEngine) -> int:
+    """Shared-cache bytes divided by slots — the number kv_bits=8 halves
+    (KV entries go bf16/f32 -> int8 + one fp32 scale per token)."""
+    total = sum(x.size * x.dtype.itemsize
+                for x in jax.tree_util.tree_leaves(eng.cache))
+    return total // eng.slots
 
 
 def bench_form(params, cfg, policy, *, slots: int, requests: int,
                max_new: int, repeats: int = 3,
-               matmul_mode: str = "auto", profile: bool = True) -> dict:
+               matmul_mode: str = "auto", attn_mode: str = "auto",
+               kv_bits=None, profile: bool = True) -> dict:
     # warmup on the SAME engine instance that gets timed: the jitted
     # prefill/tick closures are per-engine, so a throwaway warmup engine
     # would leave the timed run paying compile time. One prompt per length
     # bucket compiles both batched-prefill entries.
-    eng = _engine(params, cfg, policy, slots, max_new, matmul_mode, profile)
+    eng = _engine(params, cfg, policy, slots, max_new, matmul_mode,
+                  attn_mode, kv_bits, profile)
     eng.submit([1] * 4, max_new=max_new)
     eng.submit([1] * 12, max_new=max_new)
     eng.run_all()
@@ -101,7 +116,9 @@ def bench_form(params, cfg, policy, *, slots: int, requests: int,
              "prefills": eng.prefill_calls - prefills0,
              "prompt_tokens": ptoks, "prompt_tok_per_sec": ptoks / dt,
              "prefill_secs": eng.prefill_secs - psecs0,
-             "decode_secs": eng.decode_secs - dsecs0}
+             "decode_secs": eng.decode_secs - dsecs0,
+             "attn_mode": attn_mode, "kv_bits": kv_bits,
+             "cache_bytes_per_slot": _cache_bytes_per_slot(eng)}
         if best is None or r["tok_per_sec"] > best["tok_per_sec"]:
             best = r
     return best
@@ -122,6 +139,13 @@ def main():
                     help="quantized-matmul dispatch for the q/qp forms "
                          "(kernel = Pallas, interpret mode off-TPU — slow "
                          "on CPU, for kernel-path measurement only)")
+    ap.add_argument("--attn-mode", default="auto",
+                    choices=["auto", "kernel", "ref"],
+                    help="decode-attention dispatch (kernel = fused Pallas "
+                         "attn_decode, interpret mode off-TPU)")
+    ap.add_argument("--kv8", action="store_true",
+                    help="serve from an int8 KV cache: halves the "
+                         "cache-bytes-per-slot column")
     ap.add_argument("--no-profile", action="store_true",
                     help="disable the per-phase timers (they block on each "
                          "jitted call): times the pure async engine, at the "
@@ -151,9 +175,10 @@ def main():
     print(f"{cfg.name} reduced(L={args.layers}, d={args.d_model}, "
           f"V={args.vocab}), {args.requests} mixed-length requests "
           f"(prompt lens {MIX_LENGTHS}) x {args.max_new} tokens")
+    kv_bits = 8 if args.kv8 else None
     print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
           f"{'prefills':>8} {'secs':>7} {'pfill_s':>7} {'dec_s':>7} "
-          f"{'tok/s':>8} {'ptok/s':>8}")
+          f"{'tok/s':>8} {'ptok/s':>8} {'KB/slot':>8}")
     for form in args.forms.split(","):
         p, pol = form_params[form]
         results[form] = []
@@ -161,12 +186,14 @@ def main():
             r = bench_form(p, cfg, pol, slots=slots, requests=args.requests,
                            max_new=args.max_new, repeats=args.repeats,
                            matmul_mode=args.matmul_mode,
+                           attn_mode=args.attn_mode, kv_bits=kv_bits,
                            profile=not args.no_profile)
             results[form].append(r)
             print(f"{form:>4} {r['slots']:>5} {r['tokens']:>7} "
                   f"{r['ticks']:>6} {r['prefills']:>8} {r['secs']:>7.2f} "
                   f"{r['prefill_secs']:>7.2f} {r['decode_secs']:>7.2f} "
-                  f"{r['tok_per_sec']:>8.1f} {r['prompt_tok_per_sec']:>8.1f}")
+                  f"{r['tok_per_sec']:>8.1f} {r['prompt_tok_per_sec']:>8.1f} "
+                  f"{r['cache_bytes_per_slot'] / 1024:>8.1f}")
 
     if args.out:
         artifact = {
@@ -176,6 +203,12 @@ def main():
             "requests": args.requests, "max_new": args.max_new,
             "mix_lengths": MIX_LENGTHS, "repeats": args.repeats,
             "matmul_mode": args.matmul_mode,
+            "attn_mode": args.attn_mode, "kv_bits": kv_bits,
+            # with --no-profile the per-phase timers never run, so the
+            # prefill_secs/decode_secs fields are 0.0-by-absence — this
+            # flag lets artifact consumers tell that apart from a
+            # measured-zero phase
+            "profile": not args.no_profile,
             "results": results,
         }
         with open(args.out, "w") as f:

@@ -36,6 +36,14 @@ def main():
                     choices=["auto", "kernel", "dequant"],
                     help="quantized-matmul dispatch: Pallas kernels, fused "
                          "dequant fallback, or auto (kernel on TPU)")
+    ap.add_argument("--attn-mode", default="auto",
+                    choices=["auto", "kernel", "ref"],
+                    help="decode-attention dispatch: fused Pallas kernel, "
+                         "einsum reference, or auto (kernel on TPU)")
+    ap.add_argument("--kv8", action="store_true",
+                    help="serve from an int8 KV cache (per-token scales; "
+                         "half the cache bytes per slot — attention "
+                         "families only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -54,7 +62,9 @@ def main():
     eng = ServingEngine(params, cfg, policy=policy, slots=args.slots,
                         max_len=64 + args.max_new,
                         temperature=args.temperature, eos_id=args.eos_id,
-                        matmul_mode=args.matmul_mode)
+                        matmul_mode=args.matmul_mode,
+                        attn_mode=args.attn_mode,
+                        kv_bits=8 if args.kv8 else None)
     # mixed prompt lengths: exercises the length-bucketed batched admission
     lens = [4, 8, 5, 12, 3, 16, 7, 9]
     t0 = time.time()

@@ -105,15 +105,20 @@ def _state_template(cfg: ModelConfig, tcfg: TrainConfig, quant: str):
 
 def _cache_template(cfg: ModelConfig, shape: ShapeConfig,
                     kv8: bool = False):
-    if kv8 and cfg.family not in ("ssm",):
-        from repro.models import transformer as tf_mod
-        if cfg.family == "hybrid":
-            kv8 = False        # hybrid kv8 not implemented; fall through
-        else:
+    if kv8:
+        if cfg.family == "ssm":
+            # no KV cache to quantize — say so instead of silently
+            # building the float state cache under a kv8-labelled cell
+            import warnings
+            warnings.warn(
+                f"kv8 requested for family 'ssm' ({cfg.name}): it has no "
+                "KV cache; building the float state cache", stacklevel=2)
+        else:      # transformer family AND hybrid both serve int8 KV now
             return jax.eval_shape(
-                lambda: tf_mod.init_cache(cfg, shape.global_batch,
-                                          shape.seq_len, COMPUTE_DTYPE,
-                                          quantized=True))
+                lambda: get_model(cfg).init_cache(cfg, shape.global_batch,
+                                                  shape.seq_len,
+                                                  COMPUTE_DTYPE,
+                                                  quantized=True))
     return jax.eval_shape(
         lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
                            COMPUTE_DTYPE))

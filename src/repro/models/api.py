@@ -31,10 +31,21 @@ packed containers) 'kernel' runs the Pallas qmatmul/qmatvec kernels (weights
 expanded only in VMEM), 'dequant' runs the fused levels-matmul fallback, and
 'auto' picks 'kernel' on TPU. Neither serve mode materializes a dequantized
 fp32 weight matrix in the graph.
+
+The attention-bearing families (everything but ``ssm``) take two more
+serving knobs: ``decode_step(..., attn_mode="auto"|"kernel"|"ref")``
+dispatches decode attention between the fused Pallas
+``kernels.attn_decode`` kernel and the einsum reference
+(``models.attention.decode_attention``), and
+``prefill(..., quantize_cache=True)`` / ``init_cache(..., kv_bits=8)``
+store the KV cache as int8 values + per-token fp32 scales (half the cache
+bytes per slot); the decode paths read the quantized cache directly under
+either attn_mode.
 """
 from __future__ import annotations
 
 from types import ModuleType
+from typing import Optional
 
 from repro.configs.base import ModelConfig
 from repro.models import hybrid, mamba2, transformer
@@ -55,18 +66,27 @@ def get_model(cfg: ModelConfig) -> ModuleType:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
-               per_slot_len: bool = False):
+               per_slot_len: bool = False, kv_bits: Optional[int] = None):
     """Decode cache/state for ``batch`` rows. With ``per_slot_len`` the
     ``len`` entry is a (batch,) int32 vector — one length per slot — which is
-    what the batched ``decode_step`` path and ``insert_prefill`` expect."""
+    what the batched ``decode_step`` path and ``insert_prefill`` expect.
+
+    ``kv_bits=8`` allocates the KV cache as int8 + per-token fp32 scales
+    (transformer-family and hybrid; ``ssm`` has no KV cache and raises)."""
     import jax.numpy as jnp
 
+    if kv_bits not in (None, 8):
+        raise ValueError(f"kv_bits must be None or 8, got {kv_bits!r}")
     dtype = dtype or jnp.bfloat16
     mod = get_model(cfg)
     if cfg.family == "ssm":
+        if kv_bits:
+            raise ValueError("kv_bits=8 is meaningless for family 'ssm': "
+                             "it has no KV cache to quantize")
         cache = mod.init_state(cfg, batch, max_len, dtype)
     else:
-        cache = mod.init_cache(cfg, batch, max_len, dtype)
+        cache = mod.init_cache(cfg, batch, max_len, dtype,
+                               quantized=kv_bits == 8)
     if per_slot_len:
         cache["len"] = jnp.zeros((batch,), jnp.int32)
     return cache

@@ -7,6 +7,14 @@ flash-attention recurrence expressed in pure JAX (``jax.lax.scan`` over KV
 chunks). XLA fuses each chunk's QK^T+softmax+PV; on TPU the same structure is
 what a Pallas flash kernel would tile, so the dry-run HLO reflects realistic
 memory behaviour at 32k/500k sequence lengths.
+
+The decode step has an actual Pallas kernel: ``decode_attention`` dispatches
+on ``mode`` ("auto" | "kernel" | "ref", mirroring
+``quant_dense.serve_apply``) between the fused
+``repro.kernels.attn_decode`` kernel (QK^T -> online softmax -> PV in VMEM,
+per-row cache_len block skipping, int8-cache dequant epilogue; 'auto' picks
+it on TPU) and the plain-einsum reference below, which the kernel package's
+``ref.py`` oracle matches term for term.
 """
 from __future__ import annotations
 
@@ -15,9 +23,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["chunked_attention", "decode_attention", "sliding_window_attention"]
+__all__ = ["chunked_attention", "decode_attention", "sliding_window_attention",
+           "resolve_attn_mode", "ATTN_MODES"]
 
 NEG_INF = -1e30
+
+ATTN_MODES = ("auto", "kernel", "ref")
+
+
+def resolve_attn_mode(mode: str) -> str:
+    """'auto' -> fused Pallas decode kernel on TPU, einsum path elsewhere."""
+    if mode == "auto":
+        from repro.kernels.qmatmul.ops import on_tpu
+        return "kernel" if on_tpu() else "ref"
+    if mode not in ("kernel", "ref"):
+        raise ValueError(f"attn mode must be one of {ATTN_MODES}, "
+                         f"got {mode!r}")
+    return mode
 
 
 def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
@@ -128,7 +150,9 @@ def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
-                     cache_len: jnp.ndarray, k_scale=None, v_scale=None) -> jnp.ndarray:
+                     cache_len: jnp.ndarray, k_scale=None, v_scale=None, *,
+                     mode: str = "auto",
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """One-token attention against a (B, S, KV, D) cache. q: (B, 1, H, D).
 
     ``cache_len``: scalar or (B,) number of valid cache entries. O(S) compute,
@@ -137,7 +161,17 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     int8 cache support: pass per-token ``k_scale``/``v_scale`` (B, S); the
     scales factor exactly through the score and value contractions, so the
     einsums read the int8 arrays directly (half the bf16 cache traffic).
+
+    ``mode`` selects the implementation: 'kernel' runs the fused Pallas
+    kernel (``repro.kernels.attn_decode``: blocked online softmax in VMEM —
+    no (..., S) score tensor in HBM — per-row valid-length block skipping,
+    int8 dequant fused into the epilogue; interpret mode off-TPU, for
+    tests), 'ref' the einsum path below, 'auto' (default) kernel on TPU.
     """
+    if resolve_attn_mode(mode) == "kernel":
+        from repro.kernels.attn_decode.ops import attn_decode
+        return attn_decode(q, k_cache, v_cache, cache_len, k_scale, v_scale,
+                           interpret=interpret)
     b, _, h, d = q.shape
     s, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh

@@ -126,17 +126,27 @@ def _logits(params, h, cfg, policy, deltas, mm: str = "auto"):
 
 # --- serving -----------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               quantized: bool = False):
+    """Decode state: per-layer mamba states + one KV cache per shared-block
+    application. ``quantized``: int8 KV entries + per-(group,batch,position)
+    fp32 scales — the transformer family's §Perf H-kv8 cache, extended to
+    the hybrid attention applications (half the KV bytes per slot)."""
     n_groups, n_tail = _counts(cfg)
     one = mamba2.block_state(cfg, batch)
+    kv_shape = (n_groups, batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    if quantized:
+        kv = {"k": jnp.zeros(kv_shape, jnp.int8),
+              "v": jnp.zeros(kv_shape, jnp.int8),
+              "k_scale": jnp.zeros((n_groups, batch, max_len), jnp.float32),
+              "v_scale": jnp.zeros((n_groups, batch, max_len), jnp.float32)}
+    else:
+        kv = {"k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype)}
     state = {
         "groups": jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(
                 x, (n_groups, cfg.attn_every) + x.shape), one),
-        "kv": {"k": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads,
-                               cfg.head_dim), dtype),
-               "v": jnp.zeros((n_groups, batch, max_len, cfg.num_kv_heads,
-                               cfg.head_dim), dtype)},
+        "kv": kv,
         "len": jnp.zeros((), jnp.int32),
     }
     if n_tail:
@@ -148,13 +158,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             deltas=None, dtype=jnp.bfloat16, attn_chunk: int = 1024,
             max_len: Optional[int] = None, chunk: int = mamba2.DEFAULT_CHUNK,
+            quantize_cache: bool = False,
             lengths: Optional[jnp.ndarray] = None,
             matmul_mode: str = "auto"):
     """``lengths`` (B,) enables right-padded multi-request prefill: mamba
     blocks mask the SSD recurrence / gather the true conv tail (see
     mamba2.block_apply), attention is causal so real positions never see the
     padding, and the junk K/V written at padded slots is masked out by decode
-    (per-row ``len``) until overwritten."""
+    (per-row ``len``) until overwritten. ``quantize_cache`` stores the KV
+    cache as int8 + per-token scales (see :func:`init_cache`)."""
     n_groups, n_tail = _counts(cfg)
     bsz, s = batch["tokens"].shape
     max_len = max_len or s
@@ -181,11 +193,18 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
     gd = _dget(deltas, "groups")
     h, (gstates, ks, vs) = jax.lax.scan(group_body, h, (params["groups"], gd))
-    state = init_cache(cfg, bsz, max_len, dtype)
+    state = init_cache(cfg, bsz, max_len, dtype, quantized=quantize_cache)
     state["groups"] = gstates
     pad = max_len - s
-    state["kv"]["k"] = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
-    state["kv"]["v"] = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(dtype)
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    if quantize_cache:
+        qk, sk = jax.vmap(transformer._quantize_kv)(ks)   # over group dim
+        qv, sv = jax.vmap(transformer._quantize_kv)(vs)
+        state["kv"] = {"k": qk, "v": qv, "k_scale": sk, "v_scale": sv}
+    else:
+        state["kv"]["k"] = ks.astype(dtype)
+        state["kv"]["v"] = vs.astype(dtype)
     if n_tail:
         h, tstates = _mamba_scan(params["tail"], _dget(deltas, "tail"), h, cfg,
                                  policy, chunk, "none", return_state=True,
@@ -203,12 +222,19 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
 def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
                 policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16,
-                matmul_mode: str = "auto"):
+                matmul_mode: str = "auto", attn_mode: str = "auto"):
     """One token for the whole batch. ``state["len"]`` may be scalar (uniform
-    batch) or (B,) per-row lengths (slot-major continuous batching)."""
+    batch) or (B,) per-row lengths (slot-major continuous batching).
+
+    ``attn_mode`` picks the decode-attention implementation (fused Pallas
+    kernel vs einsum reference — see
+    :func:`repro.models.attention.decode_attention`); an int8 KV state
+    (``k_scale`` present, from ``prefill(quantize_cache=True)``) is read
+    directly with its per-token scales either way."""
     n_groups, n_tail = _counts(cfg)
     b = tokens.shape[0]
     pos = jnp.broadcast_to(state["len"], (b,)).astype(jnp.int32)   # (B,)
+    quantized = "k_scale" in state["kv"]
     h = embed_lookup(params["embed"], tokens, policy=policy,
                      delta=_dget(deltas, "embed", "w"), dtype=dtype)
     inv_freq = transformer.rope_freqs(cfg.head_dim, cfg.rope_theta)
@@ -223,28 +249,50 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
         return hh, st2
 
     def group_body(hh, xs):
-        gp, gd, gst, kc, vc = xs
+        if quantized:
+            gp, gd, gst, kc, vc, ks_, vs_ = xs
+        else:
+            gp, gd, gst, kc, vc = xs
+            ks_ = vs_ = None
         hh, gst2 = jax.lax.scan(mamba_body, hh, (gp, gd, gst))
         hn = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
         q, k, v = transformer._qkv(shared, hn, cfg, policy, sdelta, positions,
                                    inv_freq, matmul_mode)
-        kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
-        vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
+        if quantized:
+            kq, ksc = transformer._quantize_kv(k)
+            vq, vsc = transformer._quantize_kv(v)
+            kc = kc.at[rows, pos].set(kq[:, 0])
+            vc = vc.at[rows, pos].set(vq[:, 0])
+            ks_ = ks_.at[rows, pos].set(ksc[:, 0])
+            vs_ = vs_.at[rows, pos].set(vsc[:, 0])
+        else:
+            kc = kc.at[rows, pos].set(k[:, 0].astype(kc.dtype))
+            vc = vc.at[rows, pos].set(v[:, 0].astype(vc.dtype))
         from repro.models.attention import decode_attention
-        o = decode_attention(q, kc, vc, pos + 1)
+        o = decode_attention(q, kc, vc, pos + 1, k_scale=ks_, v_scale=vs_,
+                             mode=attn_mode)
         hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, 1,
                                         matmul_mode)
         hn = rmsnorm(shared["ln2"], hh, cfg.norm_eps)
         f, _ = transformer._ffn(shared, hn, cfg, policy, sdelta, matmul_mode)
-        return hh + f, (gst2, kc, vc)
+        out_kv = (gst2, kc, vc, ks_, vs_) if quantized else (gst2, kc, vc)
+        return hh + f, out_kv
 
     gd = _dget(deltas, "groups")
-    h, (gstates, ks, vs) = jax.lax.scan(
-        group_body, h,
-        (params["groups"], gd, state["groups"], state["kv"]["k"], state["kv"]["v"]))
+    kv = state["kv"]
+    if quantized:
+        h, (gstates, ks, vs, ksc, vsc) = jax.lax.scan(
+            group_body, h, (params["groups"], gd, state["groups"],
+                            kv["k"], kv["v"], kv["k_scale"], kv["v_scale"]))
+        new_kv = {"k": ks, "v": vs, "k_scale": ksc, "v_scale": vsc}
+    else:
+        h, (gstates, ks, vs) = jax.lax.scan(
+            group_body, h,
+            (params["groups"], gd, state["groups"], kv["k"], kv["v"]))
+        new_kv = {"k": ks, "v": vs}
     new_state = dict(state)
     new_state["groups"] = gstates
-    new_state["kv"] = {"k": ks, "v": vs}
+    new_state["kv"] = new_kv
     if n_tail:
         h, tstates = jax.lax.scan(
             mamba_body, h, (params["tail"], _dget(deltas, "tail"), state["tail"]))

@@ -286,7 +286,8 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
 
 def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
                 policy: QuantPolicy, deltas: Optional[Dict] = None,
-                dtype=jnp.bfloat16, matmul_mode: str = "auto"):
+                dtype=jnp.bfloat16, matmul_mode: str = "auto",
+                attn_mode: str = "auto"):
     """One token for the whole batch. tokens: (B, 1) int32.
 
     Returns (logits (B,1,V), new_cache). The KV cache is a ring buffer for
@@ -296,6 +297,11 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
     ``cache["len"]`` may be a scalar (uniform batch, e.g. ``generate``) or a
     (B,) vector of per-row lengths (slot-major continuous batching: every row
     is an independent request at its own position).
+
+    ``attn_mode`` ("auto" | "kernel" | "ref") picks the decode-attention
+    implementation — the fused Pallas ``kernels.attn_decode`` kernel or the
+    einsum reference (see :func:`repro.models.attention.decode_attention`);
+    it reads the int8 cache (``k_scale`` present) either way.
     """
     b = tokens.shape[0]
     pos = jnp.broadcast_to(cache["len"], (b,)).astype(jnp.int32)   # (B,)
@@ -329,7 +335,8 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
             kc = kc.at[rows, slot].set(k[:, 0].astype(kc.dtype))
             vc = vc.at[rows, slot].set(v[:, 0].astype(vc.dtype))
         valid = jnp.minimum(pos + 1, cs)
-        o = decode_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_)
+        o = decode_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_,
+                             mode=attn_mode)
         hh = hh + _attn_out(lp, o, cfg, policy, ld, b, 1, matmul_mode)
         hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
         f, _ = _ffn(lp, hn, cfg, policy, ld, matmul_mode)

@@ -42,6 +42,14 @@ the fused levels-matmul fallback, 'auto' (default) picks 'kernel' on TPU.
 In no serve mode does the decode graph materialize a dequantized weight
 matrix.
 
+Decode attention follows ``attn_mode`` the same way: 'kernel' runs the
+fused Pallas ``kernels.attn_decode`` kernel (QK^T -> online softmax -> PV
+in VMEM, per-slot valid-length block skipping), 'ref' the einsum path,
+'auto' kernel on TPU. ``kv_bits=8`` stores the shared KV cache as int8 +
+per-token scales — half the cache bytes per slot, so a fixed cache budget
+holds twice the slots — for the transformer family AND hybrid; the decode
+paths read the int8 cache directly (scales fused into attention).
+
 Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows
 — a slot's tokens can depend on what else is in the batch. Dynamic
 activation scales (``policy.act_bits``) are per-ROW (each batch row gets
@@ -78,17 +86,51 @@ def _sample(key, logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
     return jax.random.categorical(key, logits / temperature, axis=-1)
 
 
+def _attn_kwargs(cfg: ModelConfig, attn_mode: str,
+                 kv_bits: Optional[int]) -> Dict[str, Dict[str, Any]]:
+    """Validated per-call kwargs for the attention serving knobs.
+
+    ``attn_mode`` goes to ``decode_step`` and ``kv_bits=8`` turns into
+    ``prefill(quantize_cache=True)`` — both only for the attention-bearing
+    families; ``ssm`` takes neither (no decode attention, no KV cache), and
+    asking it to quantize one is a config error, not a silent no-op.
+    """
+    from repro.models.attention import ATTN_MODES, resolve_attn_mode
+    if attn_mode not in ATTN_MODES:
+        raise ValueError(f"attn_mode must be one of {ATTN_MODES}, "
+                         f"got {attn_mode!r}")
+    resolve_attn_mode(attn_mode)           # fail fast on bad explicit modes
+    if kv_bits not in (None, 8):
+        raise ValueError(f"kv_bits must be None or 8, got {kv_bits!r}")
+    if cfg.family == "ssm":
+        if kv_bits:
+            raise ValueError("kv_bits=8 is meaningless for family 'ssm': "
+                             "it has no KV cache to quantize")
+        return {"prefill": {}, "decode": {}}
+    return {"prefill": {"quantize_cache": True} if kv_bits == 8 else {},
+            "decode": {"attn_mode": attn_mode}}
+
+
 def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
              policy: QuantPolicy, deltas=None, max_new_tokens: int = 32,
              temperature: float = 0.0, seed: int = 0,
-             dtype=jnp.bfloat16, matmul_mode: str = "auto") -> jnp.ndarray:
-    """prompts (B, P) int32 -> (B, P + max_new_tokens). jit-compiled decode."""
+             dtype=jnp.bfloat16, matmul_mode: str = "auto",
+             attn_mode: str = "auto",
+             kv_bits: Optional[int] = None) -> jnp.ndarray:
+    """prompts (B, P) int32 -> (B, P + max_new_tokens). jit-compiled decode.
+
+    ``attn_mode`` picks the decode-attention implementation (fused Pallas
+    kernel / einsum ref / auto) and ``kv_bits=8`` serves from an int8 KV
+    cache — both only for the attention-bearing families (``ssm`` ignores
+    ``attn_mode`` and rejects ``kv_bits``)."""
     mod = get_model(cfg)
     b, p = prompts.shape
     max_len = p + max_new_tokens
+    attn_kw = _attn_kwargs(cfg, attn_mode, kv_bits)
     logits, cache = mod.prefill(params, {"tokens": prompts}, cfg,
                                 policy=policy, deltas=deltas, dtype=dtype,
-                                max_len=max_len, matmul_mode=matmul_mode)
+                                max_len=max_len, matmul_mode=matmul_mode,
+                                **attn_kw["prefill"])
     # independent streams: k0 samples the prefill token, the rest drive the
     # scan (sampling with `key` AND scanning over split(key, n) would reuse
     # the same randomness for tok0 and step 0)
@@ -102,7 +144,8 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
         cache, tok = carry
         logits, cache = mod.decode_step(params, cache, tok, cfg, policy=policy,
                                         deltas=deltas, dtype=dtype,
-                                        matmul_mode=matmul_mode)
+                                        matmul_mode=matmul_mode,
+                                        **attn_kw["decode"])
         nxt = _sample(k, logits[:, 0], temperature)[:, None].astype(jnp.int32)
         return (cache, nxt), nxt
 
@@ -145,6 +188,7 @@ class ServingEngine:
                  dtype=jnp.bfloat16, temperature: float = 0.0,
                  eos_id: Optional[int] = None, seed: int = 0,
                  drain_every: int = 4, matmul_mode: str = "auto",
+                 attn_mode: str = "auto", kv_bits: Optional[int] = None,
                  profile: bool = False):
         from repro.core.quant_dense import MATMUL_MODES
         if matmul_mode not in MATMUL_MODES:
@@ -158,9 +202,14 @@ class ServingEngine:
         self.eos_id = eos_id
         self.drain_every = max(1, drain_every)
         self.matmul_mode = matmul_mode
+        # decode-attention dispatch + int8 KV cache (attention families):
+        # kv_bits=8 halves cache bytes per slot, i.e. doubles the slots a
+        # fixed cache budget can hold — validated (ssm raises) in one place
+        self.attn_mode, self.kv_bits = attn_mode, kv_bits
+        self._attn_kw = _attn_kwargs(cfg, attn_mode, kv_bits)
         # shared slot-major cache, allocated ONCE
         self.cache = model_api.init_cache(cfg, slots, max_len, dtype,
-                                          per_slot_len=True)
+                                          per_slot_len=True, kv_bits=kv_bits)
         # per-slot device state
         self._tokens = jnp.zeros((slots, 1), jnp.int32)    # last emitted token
         self._active = jnp.zeros((slots,), bool)
@@ -226,12 +275,13 @@ class ServingEngine:
     def _prefill(self, params, toks, lengths=None):
         return self.mod.prefill(params, {"tokens": toks}, self.cfg,
                                 max_len=self.max_len, lengths=lengths,
-                                **self._mkw())
+                                **self._mkw(), **self._attn_kw["prefill"])
 
     def _tick(self, params, cache, tokens, active, emitted, budget, key):
         """Advance every active slot one token. Masks computed on-device."""
         logits, new_cache = self.mod.decode_step(params, cache, tokens,
-                                                 self.cfg, **self._mkw())
+                                                 self.cfg, **self._mkw(),
+                                                 **self._attn_kw["decode"])
         nxt = _sample(key, logits[:, 0], self.temperature).astype(jnp.int32)
         nxt = jnp.where(active, nxt, tokens[:, 0])          # freeze inactive
         emitted = emitted + active.astype(jnp.int32)

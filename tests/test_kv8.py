@@ -1,12 +1,18 @@
 """int8 KV cache (beyond-paper, §Perf H-kv8): decode matches bf16-cache decode
-within quantization tolerance; scales factor exactly through attention."""
+within quantization tolerance; scales factor exactly through attention —
+for the transformer family AND hybrid, through the sliding-window ring, and
+through the launch-layer kv8 cache templates."""
+import dataclasses
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduced
 from repro.core.precision import FLOAT
-from repro.models import transformer
+from repro.models import hybrid, transformer
 from repro.models.transformer import _quantize_kv
 
 B, S, P = 2, 20, 16
@@ -54,3 +60,138 @@ def test_kv8_cache_is_half_the_bytes():
     nb = lambda c: sum(x.size * x.dtype.itemsize
                        for x in jax.tree_util.tree_leaves(c))
     assert nb(c_q) < nb(c_f) * 0.55
+
+
+# --- hybrid family -----------------------------------------------------------------
+
+
+def test_kv8_hybrid_decode_close_to_bf16():
+    """Hybrid int8-KV (per shared-attention application) tracks the float
+    cache through multiple decode steps."""
+    cfg = reduced(get_config("zamba2-1.2b"), layers=4)   # 2 groups of 2
+    params = hybrid.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    logits_f, st_f = hybrid.prefill(params, {"tokens": toks[:, :P]}, cfg,
+                                    policy=FLOAT, dtype=jnp.float32, max_len=S)
+    logits_q, st_q = hybrid.prefill(params, {"tokens": toks[:, :P]}, cfg,
+                                    policy=FLOAT, dtype=jnp.float32, max_len=S,
+                                    quantize_cache=True)
+    assert st_q["kv"]["k"].dtype == jnp.int8
+    assert st_q["kv"]["k_scale"].shape == st_q["kv"]["k"].shape[:3]
+    np.testing.assert_allclose(np.asarray(logits_q), np.asarray(logits_f),
+                               atol=1e-4)   # prefill logits don't read cache
+
+    for t in range(P, S):
+        logits_f, st_f = hybrid.decode_step(params, st_f, toks[:, t:t + 1],
+                                            cfg, policy=FLOAT,
+                                            dtype=jnp.float32)
+        logits_q, st_q = hybrid.decode_step(params, st_q, toks[:, t:t + 1],
+                                            cfg, policy=FLOAT,
+                                            dtype=jnp.float32)
+        err = float(jnp.max(jnp.abs(logits_q - logits_f)))
+        denom = float(jnp.max(jnp.abs(logits_f))) + 1e-6
+        assert err / denom < 0.05, (t, err, denom)
+
+
+def test_kv8_hybrid_cache_is_half_the_kv_bytes():
+    cfg = reduced(get_config("zamba2-1.2b"), layers=4)
+    c_f = hybrid.init_cache(cfg, 4, 64)
+    c_q = hybrid.init_cache(cfg, 4, 64, quantized=True)
+    nb = lambda kv: sum(x.size * x.dtype.itemsize
+                        for x in jax.tree_util.tree_leaves(kv))
+    # mamba states are untouched; the KV part (entries + scales) halves
+    assert nb(c_q["kv"]) < nb(c_f["kv"]) * 0.6
+
+
+# --- sliding-window ring x int8 ----------------------------------------------------
+
+
+def test_kv8_swa_ring_scales_rotate_with_slots():
+    """Decode past the window: the int8 ring overwrites value AND scale at
+    slot pos % window, so each slot's scale always matches its token."""
+    cfg = reduced(get_config("mixtral-8x22b"))
+    cfg = dataclasses.replace(cfg, sliding_window=8, num_experts=0,
+                              family="dense")
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+
+    logits_f, cache_f = transformer.prefill(
+        params, {"tokens": toks[:, :P]}, cfg, policy=FLOAT,
+        dtype=jnp.float32, max_len=S)
+    logits_q, cache_q = transformer.prefill(
+        params, {"tokens": toks[:, :P]}, cfg, policy=FLOAT,
+        dtype=jnp.float32, max_len=S, quantize_cache=True)
+    cs = cache_q["k"].shape[2]
+    assert cs == 8                                   # ring bounded by window
+    for t in range(P, S):
+        logits_f, cache_f = transformer.decode_step(
+            params, cache_f, toks[:, t:t + 1], cfg, policy=FLOAT,
+            dtype=jnp.float32)
+        prev_ks = cache_q["k_scale"]
+        logits_q, cache_q = transformer.decode_step(
+            params, cache_q, toks[:, t:t + 1], cfg, policy=FLOAT,
+            dtype=jnp.float32)
+        # exactly ONE ring slot's scale was rewritten this step: t % cs
+        changed = np.nonzero(np.any(np.asarray(cache_q["k_scale"])
+                                    != np.asarray(prev_ks), axis=(0, 1)))[0]
+        assert list(changed) == [t % cs], (t, changed)
+        err = float(jnp.max(jnp.abs(logits_q - logits_f)))
+        denom = float(jnp.max(jnp.abs(logits_f))) + 1e-6
+        assert err / denom < 0.05, (t, err, denom)
+
+
+def test_kv8_ring_masking_parity_kernel_vs_ref():
+    """Per-row cache_len masking over an int8 ring cache: the fused kernel
+    agrees with the kernel-package oracle AND the einsum path when rows sit
+    at different fill levels of the same ring."""
+    from repro.kernels.attn_decode.ops import attn_decode
+    from repro.kernels.attn_decode.ref import attn_decode_ref
+    from repro.models.attention import decode_attention
+
+    b, s, h, kv, d = 4, 24, 8, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, 1, h, d))
+    kc = jax.random.normal(ks[1], (b, s, kv, d))
+    vc = jax.random.normal(ks[2], (b, s, kv, d))
+    kq, ksc = _quantize_kv(kc)
+    vq, vsc = _quantize_kv(vc)
+    lens = jnp.asarray([3, 24, 11, 17], jnp.int32)   # mixed ring fill
+    out = attn_decode(q, kq, vq, lens, ksc, vsc, bm=2, bs=8, interpret=True)
+    ref = attn_decode_ref(q, kq, vq, lens, ksc, vsc)
+    ein = decode_attention(q, kq, vq, lens, ksc, vsc, mode="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ein), atol=2e-5)
+
+
+# --- launch-layer kv8 templates (launch/steps.py) ----------------------------------
+
+
+def _decode_shape():
+    from repro.configs.base import ShapeConfig
+    return ShapeConfig("dec", 16, 2, "decode")
+
+
+def test_steps_kv8_hybrid_template_is_quantized():
+    """Regression: hybrid kv8 used to silently fall through to the bf16
+    cache; now the decode cell template carries the int8 KV form."""
+    from repro.launch import steps
+
+    cfg = reduced(get_config("zamba2-1.2b"), layers=4)
+    t = steps._cache_template(cfg, _decode_shape(), kv8=True)
+    assert t["kv"]["k"].dtype == jnp.int8
+    assert "k_scale" in t["kv"] and "v_scale" in t["kv"]
+
+
+def test_steps_kv8_ssm_warns_instead_of_silent_downgrade():
+    from repro.launch import steps
+
+    cfg = reduced(get_config("mamba2-2.7b"), layers=2)
+    with pytest.warns(UserWarning, match="KV cache"):
+        t = steps._cache_template(cfg, _decode_shape(), kv8=True)
+    assert "kv" not in t                              # plain ssm state
+
+    # non-kv8 path stays warning-free for every family
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        steps._cache_template(cfg, _decode_shape(), kv8=False)

@@ -27,6 +27,16 @@ the decode-attention dispatch (auto/kernel/ref — the fused Pallas
 int8 KV cache; every row reports the shared-cache bytes per slot, which
 kv8 halves (twice the slots per fixed cache budget).
 
+``--spec-k K`` adds the speculative-serving axis: a packed-3-bit drafter
+derived from the same checkpoint (``api.draft_of``; ``--draft-depth`` for
+the half-depth variant) proposes K tokens per tick and the swept form
+verifies them in one multi-token pass. The ``acc/tick`` column reports
+tokens committed per slot-tick (exactly 1.0 without speculation — the
+tokens-per-tick multiplier is the whole point), plus the drain-synced
+``spec_accept_rate`` in the artifact; ``--check`` then gates on
+accepted-tokens-per-tick > 1 in every swept cell instead of the qp
+monotonicity curve.
+
 Results are also written as a JSON artifact (default ``BENCH_serving.json``)
 so CI can archive the perf trajectory.
 
@@ -63,11 +73,15 @@ def _prompts(requests: int):
 
 
 def _engine(params, cfg, policy, slots, max_new, matmul_mode="auto",
-            attn_mode="auto", kv_bits=None, profile=True):
+            attn_mode="auto", kv_bits=None, spec_k=0, draft=None,
+            profile=True):
     return ServingEngine(params, cfg, policy=policy, slots=slots,
-                         max_len=MAX_PROMPT + max_new + 1,
+                         max_len=MAX_PROMPT + max_new + 1 + spec_k,
                          dtype=jnp.float32, matmul_mode=matmul_mode,
                          attn_mode=attn_mode, kv_bits=kv_bits,
+                         spec_k=spec_k,
+                         draft_params=draft[1] if draft else None,
+                         draft_cfg=draft[0] if draft else None,
                          profile=profile)
 
 
@@ -82,13 +96,14 @@ def _cache_bytes_per_slot(eng: ServingEngine) -> int:
 def bench_form(params, cfg, policy, *, slots: int, requests: int,
                max_new: int, repeats: int = 3,
                matmul_mode: str = "auto", attn_mode: str = "auto",
-               kv_bits=None, profile: bool = True) -> dict:
+               kv_bits=None, spec_k: int = 0, draft=None,
+               profile: bool = True) -> dict:
     # warmup on the SAME engine instance that gets timed: the jitted
     # prefill/tick closures are per-engine, so a throwaway warmup engine
     # would leave the timed run paying compile time. One prompt per length
     # bucket compiles both batched-prefill entries.
     eng = _engine(params, cfg, policy, slots, max_new, matmul_mode,
-                  attn_mode, kv_bits, profile)
+                  attn_mode, kv_bits, spec_k, draft, profile)
     eng.submit([1] * 4, max_new=max_new)
     eng.submit([1] * 12, max_new=max_new)
     eng.run_all()
@@ -111,13 +126,22 @@ def bench_form(params, cfg, policy, *, slots: int, requests: int,
         # the prefill/decode split makes per-phase regressions visible: a
         # tok/s dip can hide admission cost (more slots => fewer, bigger
         # batched prefills) behind decode amortization, and vice versa
+        ticks = eng.decode_calls - ticks0
+        # per-slot speculative win: decode-emitted tokens per request tick
+        # (the admission sample rides prefill, so it is excluded). Exactly
+        # 1.0 without speculation; 1 + mean accepted drafts with it.
+        slot_ticks = sum(r.ticks for r in done)
+        dec_toks = sum(len(r.out) - 1 for r in done)
         r = {"slots": slots, "tokens": toks, "secs": dt,
-             "tok_per_sec": toks / dt, "ticks": eng.decode_calls - ticks0,
+             "tok_per_sec": toks / dt, "ticks": ticks,
              "prefills": eng.prefill_calls - prefills0,
              "prompt_tokens": ptoks, "prompt_tok_per_sec": ptoks / dt,
              "prefill_secs": eng.prefill_secs - psecs0,
              "decode_secs": eng.decode_secs - dsecs0,
              "attn_mode": attn_mode, "kv_bits": kv_bits,
+             "spec_k": spec_k,
+             "accepted_tok_per_tick": dec_toks / max(slot_ticks, 1),
+             "spec_accept_rate": eng.spec_accept_rate,
              "cache_bytes_per_slot": _cache_bytes_per_slot(eng)}
         if best is None or r["tok_per_sec"] > best["tok_per_sec"]:
             best = r
@@ -146,6 +170,14 @@ def main():
     ap.add_argument("--kv8", action="store_true",
                     help="serve from an int8 KV cache: halves the "
                          "cache-bytes-per-slot column")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding axis: a packed-3-bit drafter "
+                         "(api.draft_of of the same checkpoint) proposes K "
+                         "tokens per tick; adds the acc/tick column (tokens "
+                         "committed per slot-tick, 1.0 without spec)")
+    ap.add_argument("--draft-depth", type=float, default=1.0,
+                    help="drafter depth fraction for --spec-k (0.5 = the "
+                         "half-depth draft variant)")
     ap.add_argument("--no-profile", action="store_true",
                     help="disable the per-phase timers (they block on each "
                          "jitted call): times the pure async engine, at the "
@@ -169,6 +201,13 @@ def main():
         "q": (quant_dense.export_levels(params, W3), W3),
         "qp": (quant_dense.export_container(params, W3), W3),
     }
+    # the drafter comes from the SAME checkpoint (self-speculation): every
+    # form is verified by its own weights with the qp slice drafting
+    draft = None
+    if args.spec_k:
+        from repro.models import api as model_api
+        draft = model_api.draft_of(cfg, params, policy=W3,
+                                   depth_fraction=args.draft_depth)
     slot_counts = [int(s) for s in args.slots.split(",")]
 
     results: dict = {}
@@ -178,7 +217,7 @@ def main():
     kv_bits = 8 if args.kv8 else None
     print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
           f"{'prefills':>8} {'secs':>7} {'pfill_s':>7} {'dec_s':>7} "
-          f"{'tok/s':>8} {'ptok/s':>8} {'KB/slot':>8}")
+          f"{'tok/s':>8} {'ptok/s':>8} {'acc/tick':>8} {'KB/slot':>8}")
     for form in args.forms.split(","):
         p, pol = form_params[form]
         results[form] = []
@@ -187,12 +226,14 @@ def main():
                            max_new=args.max_new, repeats=args.repeats,
                            matmul_mode=args.matmul_mode,
                            attn_mode=args.attn_mode, kv_bits=kv_bits,
+                           spec_k=args.spec_k, draft=draft,
                            profile=not args.no_profile)
             results[form].append(r)
             print(f"{form:>4} {r['slots']:>5} {r['tokens']:>7} "
                   f"{r['ticks']:>6} {r['prefills']:>8} {r['secs']:>7.2f} "
                   f"{r['prefill_secs']:>7.2f} {r['decode_secs']:>7.2f} "
                   f"{r['tok_per_sec']:>8.1f} {r['prompt_tok_per_sec']:>8.1f} "
+                  f"{r['accepted_tok_per_tick']:>8.2f} "
                   f"{r['cache_bytes_per_slot'] / 1024:>8.1f}")
 
     if args.out:
@@ -204,6 +245,7 @@ def main():
             "mix_lengths": MIX_LENGTHS, "repeats": args.repeats,
             "matmul_mode": args.matmul_mode,
             "attn_mode": args.attn_mode, "kv_bits": kv_bits,
+            "spec_k": args.spec_k, "draft_depth": args.draft_depth,
             # with --no-profile the per-phase timers never run, so the
             # prefill_secs/decode_secs fields are 0.0-by-absence — this
             # flag lets artifact consumers tell that apart from a
@@ -214,6 +256,20 @@ def main():
         with open(args.out, "w") as f:
             json.dump(artifact, f, indent=2)
         print(f"wrote {args.out}")
+
+    if args.spec_k:
+        # speculative gate: every swept cell must commit MORE than one
+        # token per slot-tick — i.e. the drafter earns its keep (the
+        # tokens-per-tick multiplier the subsystem exists for)
+        cells = [(f, r["slots"], r["accepted_tok_per_tick"])
+                 for f, rs in results.items() for r in rs]
+        ok = all(a > 1.0 for _, _, a in cells)
+        print(f"spec_k={args.spec_k} accepted-tokens-per-tick > 1 in all "
+              f"{len(cells)} cells: {ok} "
+              f"(min {min(a for _, _, a in cells):.2f})")
+        if args.check and not (cells and ok):
+            raise SystemExit(1)
+        return
 
     pts = [(r["slots"], r["tok_per_sec"]) for r in results.get("qp", ())
            if r["slots"] in (1, 4, 8)]

@@ -43,7 +43,8 @@ from repro.core.treeutil import flatten_with_path, map_with_path, role_of, unfla
 
 __all__ = ["init", "apply", "serve_apply", "tied_logits", "resolve_matmul_mode",
            "MATMUL_MODES", "effective_weight", "fit_deltas", "fit_deltas_stacked",
-           "export_levels", "export_container", "export_packed", "packed_apply"]
+           "export_levels", "export_container", "export_packed", "packed_apply",
+           "is_serve_form"]
 
 
 def init(key, in_dim: int, out_dim: int, *, bias: bool = True,
@@ -177,6 +178,15 @@ def apply(params: Dict[str, Any], x: jnp.ndarray, *, policy: QuantPolicy,
 
 
 # --- whole-tree operations ----------------------------------------------------
+
+def is_serve_form(params: Any) -> bool:
+    """True if the tree already carries serve-form leaves ({"q"} levels or
+    {"qp"} packed containers) rather than float master weights — i.e.
+    ``export_levels``/``export_container`` already ran on it."""
+    flat = flatten_with_path(params)
+    return any(p == n or p.endswith("/" + n)
+               for p in flat for n in ("q", "qp"))
+
 
 def _is_weight(path: str) -> bool:
     return path.endswith("/w") or path == "w"

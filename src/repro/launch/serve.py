@@ -3,6 +3,11 @@ continuous-batching engine (one jitted decode per tick, all slots at once).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --requests 8 --slots 4 --max-new 16
+
+Speculative serving (the 3-bit drafter proposes, the serving form verifies):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --quant float --spec-k 4 --requests 8 --slots 4 --max-new 16
 """
 from __future__ import annotations
 
@@ -44,12 +49,28 @@ def main():
                     help="serve from an int8 KV cache (per-token scales; "
                          "half the cache bytes per slot — attention "
                          "families only)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: the packed-3-bit drafter "
+                         "(api.draft_of of the same checkpoint) proposes "
+                         "K tokens per tick, the serving weights verify "
+                         "them in one multi-token pass (dense/moe/hybrid; "
+                         "ssm rejects)")
+    ap.add_argument("--draft-depth", type=float, default=1.0,
+                    help="fraction of the layer stack the drafter keeps "
+                         "(1.0 = full-depth self-draft)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    draft_cfg = draft_params = None
+    if args.spec_k:
+        # derive the drafter from the master float weights BEFORE the
+        # serving form is exported (draft_of re-exports its slice to qp)
+        from repro.models import api as model_api
+        draft_cfg, draft_params = model_api.draft_of(
+            cfg, params, depth_fraction=args.draft_depth)
     if args.quant == "w3":
         export = {"q": quant_dense.export_levels,
                   "qp": quant_dense.export_container}.get(args.form)
@@ -60,11 +81,13 @@ def main():
         policy = FLOAT
 
     eng = ServingEngine(params, cfg, policy=policy, slots=args.slots,
-                        max_len=64 + args.max_new,
+                        max_len=64 + args.max_new + args.spec_k,
                         temperature=args.temperature, eos_id=args.eos_id,
                         matmul_mode=args.matmul_mode,
                         attn_mode=args.attn_mode,
-                        kv_bits=8 if args.kv8 else None)
+                        kv_bits=8 if args.kv8 else None,
+                        spec_k=args.spec_k, draft_params=draft_params,
+                        draft_cfg=draft_cfg)
     # mixed prompt lengths: exercises the length-bucketed batched admission
     lens = [4, 8, 5, 12, 3, 16, 7, 9]
     t0 = time.time()
@@ -75,12 +98,15 @@ def main():
     done = eng.run_all()
     dt = time.time() - t0
     toks = sum(len(r.out) for r in done)
+    spec = (f", spec accept rate {eng.spec_accept_rate:.2f} "
+            f"(K={args.spec_k})" if args.spec_k else "")
     print(f"{len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks / dt:.1f} tok/s on CPU), "
           f"{eng.decode_calls} batched decode ticks "
           f"({toks / max(eng.decode_calls, 1):.2f} tok/tick), "
           f"{eng.prefill_calls} bucketed prefill calls "
-          f"({len(done) / max(eng.prefill_calls, 1):.2f} req/prefill)")
+          f"({len(done) / max(eng.prefill_calls, 1):.2f} req/prefill)"
+          f"{spec}")
 
 
 if __name__ == "__main__":

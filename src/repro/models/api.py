@@ -41,17 +41,43 @@ dispatches decode attention between the fused Pallas
 store the KV cache as int8 values + per-token fp32 scales (half the cache
 bytes per slot); the decode paths read the quantized cache directly under
 either attn_mode.
+
+Speculative decoding adds three entry points (transformer-family + hybrid;
+``ssm`` raises — its SSD state folds every token irreversibly):
+
+    verify_step(params, cache, tokens (B,T), cfg, ...)
+        -> (logits (B,T,V), cache, trajectory)
+        causal-masked multi-token decode against the live cache: position
+        ``t``'s logits match what sequential ``decode_step`` would produce
+        after ``tokens[:, :t+1]``. ``trajectory`` is the per-step state
+        snapshot stack rollback needs (None for the stateless-KV families).
+    rollback_cache(cfg, cache, slots, new_lens, trajectory=None)
+        per-row rewind of rejected draft suffixes: ``len`` drops, wiped KV
+        entries + int8 scales are zeroed (exact un-write), hybrid mamba
+        states are restored from ``trajectory``. Zero-distance rewinds and
+        out-of-range ``slots`` entries are identities.
+    spec_state_snapshot(cfg, cache)
+        the subtree rollback restores from snapshots (None when a length
+        rewind suffices) — what a draft chain stacks per step.
+
+``draft_of(cfg, params)`` derives the speculative DRAFTER from any
+checkpoint: the packed 3-bit ``qp`` serve form of the same weights (the
+paper's near-free fixed-point network), optionally depth-sliced.
 """
 from __future__ import annotations
 
+import dataclasses
 from types import ModuleType
 from typing import Optional
+
+import jax
 
 from repro.configs.base import ModelConfig
 from repro.models import hybrid, mamba2, transformer
 
 __all__ = ["get_model", "init_cache", "prefill", "decode_step",
-           "insert_prefill", "insert_prefill_many"]
+           "verify_step", "rollback_cache", "spec_state_snapshot",
+           "draft_of", "insert_prefill", "insert_prefill_many"]
 
 _FAMILY_MODULE = {
     "dense": transformer, "audio": transformer, "vlm": transformer,
@@ -98,6 +124,67 @@ def prefill(params, batch, cfg: ModelConfig, **kw):
 
 def decode_step(params, cache, tokens, cfg: ModelConfig, **kw):
     return get_model(cfg).decode_step(params, cache, tokens, cfg, **kw)
+
+
+def verify_step(params, cache, tokens, cfg: ModelConfig, **kw):
+    """Multi-token decode against the live cache (speculative verify).
+    Returns (logits (B,T,V), new_cache, trajectory). ``ssm`` raises."""
+    return get_model(cfg).verify_step(params, cache, tokens, cfg, **kw)
+
+
+def rollback_cache(cfg: ModelConfig, cache, slots, new_lens, trajectory=None):
+    """Rewind rows ``slots`` to ``new_lens`` — undo rejected draft
+    suffixes. See the module docstring for the exact semantics; ``ssm``
+    raises (SSD state can't rewind)."""
+    return get_model(cfg).rollback_cache(cache, slots, new_lens, trajectory)
+
+
+def spec_state_snapshot(cfg: ModelConfig, cache):
+    """Per-step snapshot subtree a draft chain must stack for rollback
+    (None for the pure-KV families). ``ssm`` raises."""
+    return get_model(cfg).spec_state_snapshot(cache)
+
+
+def draft_of(cfg: ModelConfig, params, *, policy=None,
+             depth_fraction: float = 1.0):
+    """Derive a speculative DRAFTER from any checkpoint, no second training
+    run: returns ``(draft_cfg, draft_params)`` where the params are the
+    packed 3-bit ``qp`` serve form (``quant_dense.export_container``) of
+    the same weights — the paper's nearly-free fixed-point network, reused
+    as the model that drafts for its own full-precision master copy.
+
+    ``depth_fraction < 1`` additionally slices the leading stacked-layer
+    axis (transformer/ssm: ``layers``; hybrid: whole mamba+attention
+    ``groups``, keeping the tail) for a cheaper, lower-acceptance drafter —
+    the bench's half-depth variant. Params already in a serve form
+    ({"q"}/{"qp"} leaves) are depth-sliced but not re-exported."""
+    from repro.core import quant_dense
+    from repro.core.precision import W3A8
+
+    if not 0.0 < depth_fraction <= 1.0:
+        raise ValueError(f"depth_fraction must be in (0, 1], "
+                         f"got {depth_fraction}")
+    draft_cfg, draft_params = cfg, params
+    if depth_fraction < 1.0:
+        if cfg.family == "hybrid":
+            n_groups = cfg.num_layers // cfg.attn_every
+            keep = max(1, int(n_groups * depth_fraction))
+            draft_params = dict(params)
+            draft_params["groups"] = jax.tree_util.tree_map(
+                lambda x: x[:keep], params["groups"])
+            draft_cfg = dataclasses.replace(
+                cfg, num_layers=keep * cfg.attn_every
+                + cfg.num_layers % cfg.attn_every)
+        else:
+            keep = max(1, int(cfg.num_layers * depth_fraction))
+            draft_params = dict(params)
+            draft_params["layers"] = jax.tree_util.tree_map(
+                lambda x: x[:keep], params["layers"])
+            draft_cfg = dataclasses.replace(cfg, num_layers=keep)
+    if not quant_dense.is_serve_form(draft_params):
+        draft_params = quant_dense.export_container(draft_params,
+                                                    policy or W3A8)
+    return draft_cfg, draft_params
 
 
 def insert_prefill(cfg: ModelConfig, cache, slot, src):

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["chunked_attention", "decode_attention", "sliding_window_attention",
-           "resolve_attn_mode", "ATTN_MODES"]
+           "verify_attention", "resolve_attn_mode", "ATTN_MODES"]
 
 NEG_INF = -1e30
 
@@ -147,6 +147,41 @@ def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                           unroll=True if inner_unroll() else 1)  # (nq,B,chunk,H,D)
     out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * chunk, h, d)
     return out[:, :l].astype(q.dtype)
+
+
+def verify_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, valid: jnp.ndarray,
+                     k_scale=None, v_scale=None) -> jnp.ndarray:
+    """Multi-token decode attention for speculative verify. q: (B, T, H, D)
+    against a (B, S, KV, D) cache; ``valid`` (B, T) is the number of visible
+    cache entries per query (its own just-written position included), so the
+    T draft positions are causally masked against each other AND against the
+    live prefix — the bucketed-prefill masking rule applied to the decode
+    cache. Term-for-term the T>1 generalization of :func:`decode_attention`'s
+    reference path (same contractions, same int8 per-token scale factoring),
+    which keeps verify logits aligned with the sequential decode logits. Not
+    kernel-dispatched: T is tiny (spec_k+1) and runs once per tick."""
+    b, t, h, d = q.shape
+    s, kvh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    scale = 1.0 / (d ** 0.5)
+    qr = (q * scale).reshape(b, t, kvh, g, d)
+    kc = k_cache if k_scale is None else k_cache.astype(q.dtype)
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qr, kc,
+                    preferred_element_type=jnp.float32)
+    if k_scale is not None:
+        sc = sc * k_scale[:, None, None, None, :]
+    pos = jnp.arange(s)
+    mask = pos[None, None, :] < valid[:, :, None]           # (B, T, S)
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if v_scale is not None:
+        p = (p * v_scale[:, None, None, None, :]).astype(q.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(q.dtype))
+    else:
+        p = p.astype(v_cache.dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache)
+    return out.reshape(b, t, h, d).astype(q.dtype)
 
 
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,

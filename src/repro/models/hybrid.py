@@ -22,6 +22,7 @@ from repro.models.layers import (embed_init, embed_lookup, logits_readout,
                                  rmsnorm, rmsnorm_init)
 
 __all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
+           "verify_step", "rollback_cache", "spec_state_snapshot",
            "insert_prefill", "insert_prefill_many"]
 
 
@@ -300,6 +301,177 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
     new_state["len"] = state["len"] + 1
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     return _logits(params, h, cfg, policy, deltas, matmul_mode), new_state
+
+
+def _mamba_verify(lp, ld, h_bt, st0, cfg, policy, matmul_mode):
+    """One mamba layer over T tokens via the EXACT decode recurrence
+    (``block_decode`` scanned token-by-token, so verify states are bitwise
+    the states sequential decode would carry). h_bt: (B, T, D). Returns
+    (out (B, T, D), final_state, per-step state trajectory (T, ...))."""
+    def step(st, h_t):
+        h2, st2 = mamba2.block_decode(lp, h_t, st, cfg, policy=policy,
+                                      deltas=ld, matmul_mode=matmul_mode)
+        return st2, (h2[:, 0], st2)
+
+    st_final, (hs, straj) = jax.lax.scan(
+        step, st0, h_bt.transpose(1, 0, 2)[:, :, None, :])
+    return hs.transpose(1, 0, 2), st_final, straj
+
+
+def verify_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                policy: QuantPolicy, deltas=None, dtype=jnp.bfloat16,
+                matmul_mode: str = "auto", attn_mode: str = "auto"):
+    """Multi-token decode against the live state — the speculative verify
+    entry point. tokens: (B, T). Returns (logits (B, T, V), new_state,
+    trajectory).
+
+    The mamba blocks advance by the exact per-token decode recurrence; the
+    shared attention block appends T K/V entries per application and masks
+    the draft positions causally against each other and the prefix
+    (:func:`repro.models.attention.verify_attention` — the bucketed-prefill
+    masking rule on the decode cache). Because SSM states cannot be rewound
+    arithmetically, ``trajectory`` snapshots the {"groups"[, "tail"]} state
+    subtree after each of the T tokens (leading axis T+1, entry ``j`` =
+    state after consuming ``tokens[:, :j]``); :func:`rollback_cache` selects
+    each row's accepted entry from it."""
+    n_groups, n_tail = _counts(cfg)
+    b, t = tokens.shape
+    pos0 = jnp.broadcast_to(state["len"], (b,)).astype(jnp.int32)  # (B,)
+    quantized = "k_scale" in state["kv"]
+    h = embed_lookup(params["embed"], tokens, policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    inv_freq = transformer.rope_freqs(cfg.head_dim, cfg.rope_theta)
+    positions = pos0[:, None] + jnp.arange(t)[None, :]             # (B, T)
+    rows = jnp.arange(b)[:, None]                                  # (B, 1)
+    shared, sdelta = params["shared"], _dget(deltas, "shared")
+    from repro.models.attention import verify_attention
+
+    def mamba_body(hh, xs):
+        lp, ld, st = xs
+        out, st_final, straj = _mamba_verify(lp, ld, hh, st, cfg, policy,
+                                             matmul_mode)
+        return out, (st_final, straj)
+
+    def group_body(hh, xs):
+        if quantized:
+            gp, gd, gst, kc, vc, ks_, vs_ = xs
+        else:
+            gp, gd, gst, kc, vc = xs
+            ks_ = vs_ = None
+        hh, (gst2, gtraj) = jax.lax.scan(mamba_body, hh, (gp, gd, gst))
+        hn = rmsnorm(shared["ln1"], hh, cfg.norm_eps)
+        q, k, v = transformer._qkv(shared, hn, cfg, policy, sdelta, positions,
+                                   inv_freq, matmul_mode)
+        if quantized:
+            kq, ksc = transformer._quantize_kv(k)
+            vq, vsc = transformer._quantize_kv(v)
+            kc = kc.at[rows, positions].set(kq)
+            vc = vc.at[rows, positions].set(vq)
+            ks_ = ks_.at[rows, positions].set(ksc)
+            vs_ = vs_.at[rows, positions].set(vsc)
+        else:
+            kc = kc.at[rows, positions].set(k.astype(kc.dtype))
+            vc = vc.at[rows, positions].set(v.astype(vc.dtype))
+        o = verify_attention(q, kc, vc, positions + 1,
+                             k_scale=ks_, v_scale=vs_)
+        hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, t,
+                                        matmul_mode)
+        hn = rmsnorm(shared["ln2"], hh, cfg.norm_eps)
+        f, _ = transformer._ffn(shared, hn, cfg, policy, sdelta, matmul_mode)
+        out_kv = ((gst2, gtraj, kc, vc, ks_, vs_) if quantized
+                  else (gst2, gtraj, kc, vc))
+        return hh + f, out_kv
+
+    gd = _dget(deltas, "groups")
+    kv = state["kv"]
+    if quantized:
+        h, (gstates, gtraj, ks, vs, ksc, vsc) = jax.lax.scan(
+            group_body, h, (params["groups"], gd, state["groups"],
+                            kv["k"], kv["v"], kv["k_scale"], kv["v_scale"]))
+        new_kv = {"k": ks, "v": vs, "k_scale": ksc, "v_scale": vsc}
+    else:
+        h, (gstates, gtraj, ks, vs) = jax.lax.scan(
+            group_body, h,
+            (params["groups"], gd, state["groups"], kv["k"], kv["v"]))
+        new_kv = {"k": ks, "v": vs}
+    new_state = dict(state)
+    new_state["groups"] = gstates
+    new_state["kv"] = new_kv
+    # trajectory leaves carry the snapshot axis FIRST: entry j = state after
+    # consuming j tokens (entry 0 = the pre-verify state)
+    trajectory = {"groups": jax.tree_util.tree_map(
+        lambda init, tr: jnp.concatenate([init[None],
+                                          jnp.moveaxis(tr, 2, 0)]),
+        state["groups"], gtraj)}
+    if n_tail:
+        h, (tstates, ttraj) = jax.lax.scan(
+            mamba_body, h, (params["tail"], _dget(deltas, "tail"),
+                            state["tail"]))
+        new_state["tail"] = tstates
+        trajectory["tail"] = jax.tree_util.tree_map(
+            lambda init, tr: jnp.concatenate([init[None],
+                                              jnp.moveaxis(tr, 1, 0)]),
+            state["tail"], ttraj)
+    new_state["len"] = state["len"] + t
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
+    return logits, new_state, trajectory
+
+
+def spec_state_snapshot(state):
+    """The state subtree a rollback must restore from per-step snapshots:
+    the mamba SSM/conv states ({"groups"[, "tail"]}). The KV part rewinds by
+    length like the transformer family and needs no snapshot."""
+    snap = {"groups": state["groups"]}
+    if "tail" in state:
+        snap["tail"] = state["tail"]
+    return snap
+
+
+def _select_state(traj_leaf, j, baxis: int):
+    """Per-row snapshot select: traj_leaf (T+1, ...) with the batch axis at
+    ``baxis``; j (B,) picks each row's snapshot index. Returns the leaf with
+    the snapshot axis removed (batch back at ``baxis - 1``)."""
+    moved = jnp.moveaxis(traj_leaf, baxis, 0)          # (B, T+1, ...)
+    sel = jax.vmap(lambda tr, idx: tr[idx])(moved, j)  # (B, ...)
+    return jnp.moveaxis(sel, 0, baxis - 1)
+
+
+def rollback_cache(state, slots, new_lens, trajectory=None):
+    """Rewind rows ``slots`` (N,) of a slot-major hybrid state to lengths
+    ``new_lens`` (N,). KV entries + int8 scales at wiped positions are
+    zeroed and ``len`` drops (clamped to [0, current]; zero-distance rewind
+    and out-of-range ``slots`` entries are identities), exactly as in the
+    transformer family. The mamba states are restored from ``trajectory``
+    (from :func:`verify_step` or a draft-chain snapshot stack): row ``b``
+    gets snapshot ``new_len[b] - (current_len[b] - T)`` — rows rewound to
+    the full current length keep the final (= current) state. With
+    ``trajectory=None`` the mamba states are left untouched, which is only
+    sound if they never advanced past ``new_lens``."""
+    b = state["kv"]["k"].shape[1]
+    cur = jnp.broadcast_to(state["len"], (b,)).astype(jnp.int32)
+    tgt = cur.at[slots].set(jnp.asarray(new_lens, jnp.int32), mode="drop")
+    tgt = jnp.clip(tgt, 0, cur)
+    s = state["kv"]["k"].shape[2]
+    wipe = transformer._wipe_mask(tgt, cur, s)                     # (B, S)
+    out = dict(state)
+    kv = dict(state["kv"])
+    for name in ("k", "v"):
+        kv[name] = jnp.where(wipe[None, :, :, None, None], 0, kv[name])
+    if "k_scale" in kv:
+        for name in ("k_scale", "v_scale"):
+            kv[name] = jnp.where(wipe[None], 0, kv[name])
+    out["kv"] = kv
+    if trajectory is not None:
+        t_steps = jax.tree_util.tree_leaves(trajectory)[0].shape[0] - 1
+        j = jnp.clip(tgt - (cur - t_steps), 0, t_steps)
+        out["groups"] = jax.tree_util.tree_map(
+            lambda tr: _select_state(tr, j, 3), trajectory["groups"])
+        if "tail" in trajectory:
+            out["tail"] = jax.tree_util.tree_map(
+                lambda tr: _select_state(tr, j, 2), trajectory["tail"])
+    out["len"] = tgt
+    return out
 
 
 def insert_prefill(state, slot, src):

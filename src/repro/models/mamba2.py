@@ -25,7 +25,8 @@ from repro.distributed.context import constrain
 from repro.models.layers import (embed_init, embed_lookup, logits_readout,
                                  rmsnorm, rmsnorm_init)
 
-__all__ = ["init", "forward", "init_state", "decode_step", "insert_prefill",
+__all__ = ["init", "forward", "init_state", "decode_step", "verify_step",
+           "rollback_cache", "spec_state_snapshot", "insert_prefill",
            "insert_prefill_many", "block_init", "block_apply", "block_decode",
            "DEFAULT_CHUNK"]
 
@@ -335,6 +336,11 @@ def block_decode(lp, h_in: jnp.ndarray, state: Dict, cfg: ModelConfig, *,
     out = quant_dense.apply(lp["out_proj"], y, policy=policy, role="hidden",
                             delta=_dget(deltas, "out_proj", "w"),
                             mode=matmul_mode)
+    # keep the carried state's canonical fp32 dtype (block_state): the conv
+    # tail comes back in the activation dtype, and a bf16 drift would make
+    # every decode re-trace — and break scan-carried decode chains
+    # (speculative drafting) outright
+    conv_state = conv_state.astype(state["conv"].dtype)
     return h_in + out, {"ssm": s_new, "conv": conv_state}
 
 
@@ -430,6 +436,27 @@ def decode_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
     return logits, {"layers": new_layers, "len": state["len"] + 1}
+
+
+_NO_SPEC = ("family 'ssm' does not support speculative decoding: the SSD "
+            "recurrence folds every token into one fixed-size state, so a "
+            "rejected draft suffix cannot be rewound (no KV length to "
+            "rewind, and snapshotting every per-layer state per draft "
+            "token would defeat the O(1)-state point of the family)")
+
+
+def verify_step(params, state, tokens, cfg, **kw):
+    """Speculative verify is structurally unavailable for the pure-SSM
+    family — reject loudly instead of silently corrupting the state."""
+    raise ValueError(_NO_SPEC)
+
+
+def spec_state_snapshot(state):
+    raise ValueError(_NO_SPEC)
+
+
+def rollback_cache(state, slots, new_lens, trajectory=None):
+    raise ValueError(_NO_SPEC)
 
 
 def insert_prefill(state, slot, src):

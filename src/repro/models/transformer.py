@@ -25,12 +25,14 @@ from repro.core.precision import QuantPolicy
 from repro.distributed.context import constrain
 from repro.models import moe as moe_mod
 from repro.models.attention import (chunked_attention, decode_attention,
-                                    sliding_window_attention)
+                                    sliding_window_attention,
+                                    verify_attention)
 from repro.models.layers import (apply_rope, embed_init, embed_lookup,
                                  head_rmsnorm, logits_readout, mlp_apply,
                                  mlp_init, rmsnorm, rmsnorm_init, rope_freqs)
 
 __all__ = ["init", "forward", "init_cache", "prefill", "decode_step",
+           "verify_step", "rollback_cache", "spec_state_snapshot",
            "insert_prefill", "insert_prefill_many"]
 
 
@@ -357,6 +359,127 @@ def decode_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
     h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
     logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
     return logits, new_cache
+
+
+def verify_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                policy: QuantPolicy, deltas: Optional[Dict] = None,
+                dtype=jnp.bfloat16, matmul_mode: str = "auto",
+                attn_mode: str = "auto"):
+    """Multi-token decode against the live cache — the speculative-decoding
+    verify entry point. tokens: (B, T) int32, the T tokens to append
+    (committed last token + T-1 draft tokens).
+
+    Returns (logits (B, T, V), new_cache, trajectory=None): position ``t``'s
+    logits are the distribution over the token FOLLOWING ``tokens[:, t]`` —
+    exactly what ``decode_step`` would have produced after consuming
+    ``tokens[:, :t+1]`` sequentially. K/V for all T positions are written
+    into the cache (``len`` advances by T); rejected suffixes are undone with
+    :func:`rollback_cache`. Attention uses the causal per-row masking of the
+    bucketed-prefill path applied to the decode cache
+    (:func:`repro.models.attention.verify_attention`); ``attn_mode`` is
+    accepted for signature parity with ``decode_step`` but the tiny-T verify
+    matmul always takes the masked-einsum path. The trailing ``None`` is the
+    rollback trajectory slot (only stateful families need one — see hybrid).
+    """
+    b, t = tokens.shape
+    pos0 = jnp.broadcast_to(cache["len"], (b,)).astype(jnp.int32)  # (B,)
+    quantized = "k_scale" in cache
+    h = embed_lookup(params["embed"], tokens, policy=policy,
+                     delta=_dget(deltas, "embed", "w"), dtype=dtype)
+    h = constrain(h, "dec_act")
+    inv_freq = rope_freqs(cfg.head_dim, cfg.rope_theta)
+    positions = pos0[:, None] + jnp.arange(t)[None, :]             # (B, T)
+    cs = cache["k"].shape[2]
+    slot = jnp.mod(positions, cs) if cfg.sliding_window else positions
+    rows = jnp.arange(b)[:, None]                                  # (B, 1)
+
+    def body(hh, xs):
+        if quantized:
+            lp, ld, kc, vc, ks_, vs_ = xs
+        else:
+            lp, ld, kc, vc = xs
+            ks_ = vs_ = None
+        hn = rmsnorm(lp["ln1"], hh, cfg.norm_eps)
+        q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq,
+                       matmul_mode)
+        if quantized:
+            kq, ksc = _quantize_kv(k)
+            vq, vsc = _quantize_kv(v)
+            kc = kc.at[rows, slot].set(kq)
+            vc = vc.at[rows, slot].set(vq)
+            ks_ = ks_.at[rows, slot].set(ksc)
+            vs_ = vs_.at[rows, slot].set(vsc)
+        else:
+            kc = kc.at[rows, slot].set(k.astype(kc.dtype))
+            vc = vc.at[rows, slot].set(v.astype(vc.dtype))
+        valid = jnp.minimum(positions + 1, cs)                     # (B, T)
+        o = verify_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_)
+        hh = hh + _attn_out(lp, o, cfg, policy, ld, b, t, matmul_mode)
+        hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
+        f, _ = _ffn(lp, hn, cfg, policy, ld, matmul_mode)
+        out = (hh + f, (kc, vc, ks_, vs_) if quantized else (kc, vc))
+        return out
+
+    ld = deltas.get("layers") if deltas else None
+    if quantized:
+        h, (ks, vs, ksc, vsc) = jax.lax.scan(
+            body, h, (params["layers"], ld, cache["k"], cache["v"],
+                      cache["k_scale"], cache["v_scale"]))
+        new_cache = {"k": ks, "v": vs, "k_scale": ksc, "v_scale": vsc,
+                     "len": cache["len"] + t}
+    else:
+        h, (ks, vs) = jax.lax.scan(body, h, (params["layers"], ld, cache["k"],
+                                             cache["v"]))
+        new_cache = {"k": ks, "v": vs, "len": cache["len"] + t}
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = _logits(params, h, cfg, policy, deltas, matmul_mode)
+    return logits, new_cache, None
+
+
+def _wipe_mask(tgt: jnp.ndarray, cur: jnp.ndarray, cs: int) -> jnp.ndarray:
+    """(B, S) bool: cache slots holding positions in [tgt, cur) per row —
+    the entries a rollback erases. Ring-aware: position ``p`` lives at slot
+    ``p % cs``, so the wiped band is the cyclic interval starting at
+    ``tgt % cs`` of width ``cur - tgt`` (rewinds never span more than the
+    ring — the engine forbids speculating across a ring wrap)."""
+    sidx = jnp.arange(cs)
+    return (jnp.mod(sidx[None, :] - tgt[:, None], cs)
+            < (cur - tgt)[:, None])
+
+
+def spec_state_snapshot(cache):
+    """The subtree a rollback must restore from per-step snapshots. The
+    transformer-family cache is pure KV — a length rewind suffices — so
+    there is nothing to snapshot."""
+    return None
+
+
+def rollback_cache(cache, slots, new_lens, trajectory=None):
+    """Rewind rows ``slots`` (N,) of a slot-major cache to lengths
+    ``new_lens`` (N,) — the speculative-decoding rejection primitive.
+
+    Semantics: per selected row, ``len`` drops to ``new_lens`` (clamped to
+    [0, current]; a zero-distance rewind is the identity) and the K/V
+    entries + int8 per-token scales at the wiped positions are zeroed, so
+    the rolled-back cache is exactly the cache that never saw the rejected
+    tokens. Rows whose ``slots`` entry is out of range are dropped (the
+    engine's padding convention); ``trajectory`` is accepted for signature
+    parity (stateful families use it) and must be None here."""
+    assert trajectory is None, "transformer-family cache has no state trajectory"
+    b = cache["k"].shape[1]
+    cur = jnp.broadcast_to(cache["len"], (b,)).astype(jnp.int32)
+    tgt = cur.at[slots].set(jnp.asarray(new_lens, jnp.int32), mode="drop")
+    tgt = jnp.clip(tgt, 0, cur)
+    cs = cache["k"].shape[2]
+    wipe = _wipe_mask(tgt, cur, cs)                                # (B, S)
+    out = dict(cache)
+    for name in ("k", "v"):
+        out[name] = jnp.where(wipe[None, :, :, None, None], 0, cache[name])
+    if "k_scale" in cache:
+        for name in ("k_scale", "v_scale"):
+            out[name] = jnp.where(wipe[None], 0, cache[name])
+    out["len"] = tgt
+    return out
 
 
 def insert_prefill(cache, slot, src):

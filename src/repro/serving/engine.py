@@ -50,15 +50,33 @@ per-token scales — half the cache bytes per slot, so a fixed cache budget
 holds twice the slots — for the transformer family AND hybrid; the decode
 paths read the int8 cache directly (scales fused into attention).
 
+Speculative decoding (``spec_k >= 1``) changes the tick from "one token"
+to "up to spec_k+1 tokens": a quantized DRAFTER (by default the packed
+3-bit ``qp`` export of the target's own weights — ``api.draft_of``) runs
+``spec_k`` cheap ``decode_step`` proposals through the very same fused
+kernel path, the target scores all of them plus a bonus position in ONE
+multi-token ``verify_step``, vectorized acceptance-rejection keeps the
+longest target-consistent prefix (exact target distribution at any
+temperature; token-identical to non-spec greedy at T=0), and
+``rollback_cache`` rewinds both caches past the rejected suffix — all
+inside the SAME single jitted tick, so there is still no per-token (or
+per-draft-token) host sync. Per-slot acceptance lengths fold into the
+existing on-device active/emitted/budget masks; host bookkeeping only
+learns token counts at ``drain()``. Families: dense/moe/hybrid (``ssm``
+rejects spec mode loudly — SSD state can't rewind), and for sliding-window
+archs the engine requires ``max_len <= window`` so speculation never
+wraps the KV ring (a wrapped rewind would lose overwritten entries).
+
 Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows
 — a slot's tokens can depend on what else is in the batch. Dynamic
 activation scales (``policy.act_bits``) are per-ROW (each batch row gets
 its own absmax), so decode ticks are row-independent; batched-prefill
 parity under act quant additionally requires the prompt to land exactly on
 its admission bucket (padding positions inside a row enter that row's
-absmax). Dense/ssm/hybrid decode AND batched prefill with weight-only
-quantization are row-independent and therefore token-identical to
-single-request ``generate``.
+absmax) — and speculative verify processes spec_k+1 positions per row, so
+spec parity likewise needs ``act_bits=None``. Dense/ssm/hybrid decode AND
+batched prefill with weight-only quantization are row-independent and
+therefore token-identical to single-request ``generate``.
 """
 from __future__ import annotations
 
@@ -115,14 +133,29 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
              policy: QuantPolicy, deltas=None, max_new_tokens: int = 32,
              temperature: float = 0.0, seed: int = 0,
              dtype=jnp.bfloat16, matmul_mode: str = "auto",
-             attn_mode: str = "auto",
-             kv_bits: Optional[int] = None) -> jnp.ndarray:
+             attn_mode: str = "auto", kv_bits: Optional[int] = None,
+             spec_k: int = 0, draft_params=None,
+             draft_cfg: Optional[ModelConfig] = None) -> jnp.ndarray:
     """prompts (B, P) int32 -> (B, P + max_new_tokens). jit-compiled decode.
 
     ``attn_mode`` picks the decode-attention implementation (fused Pallas
     kernel / einsum ref / auto) and ``kv_bits=8`` serves from an int8 KV
     cache — both only for the attention-bearing families (``ssm`` ignores
-    ``attn_mode`` and rejects ``kv_bits``)."""
+    ``attn_mode`` and rejects ``kv_bits``).
+
+    ``spec_k >= 1`` enables speculative decoding: ``draft_params`` (default:
+    the packed-3-bit ``api.draft_of`` export of ``params``) proposes spec_k
+    tokens per step and the target verifies them in one multi-token pass —
+    same output distribution, token-identical at T=0, fewer target passes.
+    The whole decode is one jitted ``lax.while_loop`` (no per-token sync).
+    ``ssm`` rejects spec mode (SSD state can't rewind)."""
+    if spec_k:
+        return _spec_generate(params, prompts, cfg, policy=policy,
+                              deltas=deltas, max_new_tokens=max_new_tokens,
+                              temperature=temperature, seed=seed, dtype=dtype,
+                              matmul_mode=matmul_mode, attn_mode=attn_mode,
+                              kv_bits=kv_bits, spec_k=spec_k,
+                              draft_params=draft_params, draft_cfg=draft_cfg)
     mod = get_model(cfg)
     b, p = prompts.shape
     max_len = p + max_new_tokens
@@ -155,6 +188,104 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
     return out
 
 
+def _no_ring_wrap(mod, cfg: ModelConfig, max_len: int):
+    """Speculative rollback is a length rewind: a sliding-window ring that
+    wraps during the verify window would have overwritten live entries no
+    rewind can restore. Forbid the configuration instead of corrupting."""
+    if (hasattr(mod, "cache_len_for")
+            and mod.cache_len_for(cfg, max_len) < max_len):
+        raise ValueError(
+            f"speculative decoding needs max_len <= sliding_window "
+            f"({cfg.sliding_window}) for {cfg.name}: a wrapped KV ring "
+            f"cannot be rolled back (got max_len {max_len})")
+
+
+def _spec_models(params, cfg: ModelConfig, draft_params, draft_cfg):
+    """Resolve the (target, drafter) pair; derive the drafter from the
+    target checkpoint when none is given. Validates rollback capability."""
+    if cfg.family == "ssm":
+        raise ValueError("speculative decoding is unavailable for family "
+                         "'ssm': the SSD state folds every token "
+                         "irreversibly, so rejected drafts can't be rewound")
+    if draft_params is None:
+        draft_cfg, draft_params = model_api.draft_of(cfg, params)
+    else:
+        draft_cfg = draft_cfg or cfg
+    if draft_cfg.family == "ssm":
+        raise ValueError("the speculative DRAFTER can't be family 'ssm': "
+                         "its state can't be rewound past rejected drafts")
+    if draft_cfg.vocab_size != cfg.vocab_size:
+        raise ValueError(f"draft vocab {draft_cfg.vocab_size} != target "
+                         f"vocab {cfg.vocab_size}")
+    return draft_params, draft_cfg
+
+
+def _spec_generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
+                   policy: QuantPolicy, deltas, max_new_tokens: int,
+                   temperature: float, seed: int, dtype, matmul_mode: str,
+                   attn_mode: str, kv_bits: Optional[int], spec_k: int,
+                   draft_params, draft_cfg: Optional[ModelConfig]):
+    """Speculative ``generate``: one jitted ``lax.while_loop`` whose body is
+    the shared ``spec_decode_tick``; each iteration commits a variable
+    1..spec_k+1 tokens per row into a fixed output buffer."""
+    from repro.serving.spec import emit_counts, spec_decode_tick
+    draft_params, draft_cfg = _spec_models(params, cfg, draft_params,
+                                           draft_cfg)
+    mod, dmod = get_model(cfg), get_model(draft_cfg)
+    b, p = prompts.shape
+    # verify scratch-writes up to spec_k+1 positions past the committed
+    # stream; size the cache so the last in-budget tick stays in bounds
+    max_len = p + max_new_tokens + spec_k
+    _no_ring_wrap(mod, cfg, max_len)
+    _no_ring_wrap(dmod, draft_cfg, max_len)
+    attn_kw = _attn_kwargs(cfg, attn_mode, kv_bits)
+    dattn_kw = _attn_kwargs(draft_cfg, attn_mode, kv_bits)
+    mkw = dict(policy=policy, deltas=deltas, dtype=dtype,
+               matmul_mode=matmul_mode)
+    dmkw = dict(policy=policy, deltas=None, dtype=dtype,
+                matmul_mode=matmul_mode)
+    logits, cache = mod.prefill(params, {"tokens": prompts}, cfg,
+                                max_len=max_len, **mkw, **attn_kw["prefill"])
+    _, dcache = dmod.prefill(draft_params, {"tokens": prompts}, draft_cfg,
+                             max_len=max_len, **dmkw, **dattn_kw["prefill"])
+    k0, key = jax.random.split(jax.random.PRNGKey(seed))
+    tok0 = _sample(k0, logits[:, 0], temperature)[:, None].astype(jnp.int32)
+    if max_new_tokens == 1:
+        return jnp.concatenate([prompts, tok0], axis=1)
+    # rollback writes per-row lengths; normalize up front so the while_loop
+    # carry keeps one structure
+    cache["len"] = jnp.broadcast_to(cache["len"], (b,)).astype(jnp.int32)
+    dcache["len"] = jnp.broadcast_to(dcache["len"], (b,)).astype(jnp.int32)
+    outbuf = jnp.zeros((b, max_new_tokens), jnp.int32).at[:, 0].set(tok0[:, 0])
+    budget = jnp.full((b,), max_new_tokens, jnp.int32)
+    rows = jnp.arange(b)
+    t1 = spec_k + 1
+
+    def cond(carry):
+        return jnp.any(carry[3] < max_new_tokens)
+
+    def body(carry):
+        cache, dcache, pending, emitted, buf, key = carry
+        key, kt = jax.random.split(key)
+        active = emitted < max_new_tokens
+        cache, dcache, a, out, pending = spec_decode_tick(
+            mod, dmod, params, draft_params, cfg, draft_cfg, cache, dcache,
+            pending, active, spec_k=spec_k, temperature=temperature, key=kt,
+            mkw=mkw, dmkw=dmkw, attn_kw=attn_kw["decode"],
+            dattn_kw=dattn_kw["decode"])
+        n, _ = emit_counts(out, a, active=active, emitted=emitted,
+                           budget=budget, eos_id=-1)
+        for j in range(t1):
+            # rows past their window park the write at the OOB sentinel
+            idx = jnp.where(j < n, emitted + j, max_new_tokens)
+            buf = buf.at[rows, idx].set(out[:, j], mode="drop")
+        return cache, dcache, pending, emitted + n, buf, key
+
+    run = jax.jit(lambda c: jax.lax.while_loop(cond, body, c))
+    carry = run((cache, dcache, tok0, jnp.ones((b,), jnp.int32), outbuf, key))
+    return jnp.concatenate([prompts, carry[4]], axis=1)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -162,6 +293,12 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # per-request serving stats, filled at drain time: decode ticks this
+    # request participated in, and the histogram {window length -> count}
+    # of tokens emitted per tick (always {1: n} without speculation; the
+    # draft-accept length distribution with it)
+    ticks: int = 0
+    accept_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
 
 
 class ServingEngine:
@@ -189,11 +326,15 @@ class ServingEngine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  drain_every: int = 4, matmul_mode: str = "auto",
                  attn_mode: str = "auto", kv_bits: Optional[int] = None,
+                 spec_k: int = 0, draft_params=None,
+                 draft_cfg: Optional[ModelConfig] = None,
                  profile: bool = False):
         from repro.core.quant_dense import MATMUL_MODES
         if matmul_mode not in MATMUL_MODES:
             raise ValueError(f"matmul_mode must be one of {MATMUL_MODES}, "
                              f"got {matmul_mode!r}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         self.params, self.cfg, self.policy = params, cfg, policy
         self.deltas, self.dtype = deltas, dtype
         self.mod = get_model(cfg)
@@ -210,6 +351,24 @@ class ServingEngine:
         # shared slot-major cache, allocated ONCE
         self.cache = model_api.init_cache(cfg, slots, max_len, dtype,
                                           per_slot_len=True, kv_bits=kv_bits)
+        # speculative decoding: a second slot-major cache for the DRAFTER
+        # (by default the qp export of the target's own weights), sharing
+        # the engine's serving knobs; spec_accept_rate counters ride drain
+        self.spec_k = int(spec_k)
+        self._spec = self.spec_k > 0
+        self.spec_drafted = 0                 # draft proposals scored
+        self.spec_accepted = 0                # proposals the target kept
+        if self._spec:
+            draft_params, draft_cfg = _spec_models(params, cfg, draft_params,
+                                                   draft_cfg)
+            _no_ring_wrap(self.mod, cfg, max_len)
+            self.draft_params, self.draft_cfg = draft_params, draft_cfg
+            self.dmod = get_model(draft_cfg)
+            _no_ring_wrap(self.dmod, draft_cfg, max_len)
+            self._dattn_kw = _attn_kwargs(draft_cfg, attn_mode, kv_bits)
+            self.draft_cache = model_api.init_cache(
+                draft_cfg, slots, max_len, dtype, per_slot_len=True,
+                kv_bits=kv_bits)
         # per-slot device state
         self._tokens = jnp.zeros((slots, 1), jnp.int32)    # last emitted token
         self._active = jnp.zeros((slots,), bool)
@@ -220,7 +379,11 @@ class ServingEngine:
         self.queue: List[Request] = []
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._ticks_left = [0] * slots        # deterministic lifetime bound
-        self._pending: List[Tuple] = []       # (toks, emitted_mask, done, owners)
+        # pending records: (tokens (slots, T), counts (slots,), done,
+        # owners, accepted-or-None, kind) — T=1 with counts as the emitted
+        # mask for admissions and plain ticks, T=spec_k+1 with true counts
+        # for speculative ticks
+        self._pending: List[Tuple] = []
         self._finished: List[Request] = []    # synced but not yet returned
         self._uid = 0
         self.decode_calls = 0                 # ticks == decode_step calls
@@ -230,11 +393,22 @@ class ServingEngine:
         # padded length <= window, so longer prompts take the solo path
         self._bucket_cap = (self.mod.cache_len_for(cfg, max_len)
                             if hasattr(self.mod, "cache_len_for") else max_len)
-        # donate the shared cache (argument 2 / argument 1): without donation
-        # every tick and every admission materializes a full second copy of
-        # the slot-major cache. The small per-slot vectors are NOT donated —
-        # pending records hold references to pre-tick `active` arrays.
-        self._tick_fn = jax.jit(self._tick, donate_argnums=(1,))
+        # donate the shared cache(s): without donation every tick and every
+        # admission materializes a full second copy of the slot-major cache.
+        # The small per-slot vectors are NOT donated — pending records hold
+        # references to pre-tick `active` arrays.
+        if self._spec:
+            self._tick_fn = jax.jit(self._spec_tick, donate_argnums=(2, 3))
+            self._prefill_draft_fn = jax.jit(self._prefill_draft)
+            self._admit_draft_fn = jax.jit(
+                lambda dc, slot, src: self.dmod.insert_prefill(dc, slot, src),
+                donate_argnums=(0,))
+            self._admit_draft_many_fn = jax.jit(
+                lambda dc, sm, src: self.dmod.insert_prefill_many(dc, sm,
+                                                                  src),
+                donate_argnums=(0,))
+        else:
+            self._tick_fn = jax.jit(self._tick, donate_argnums=(1,))
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(1,))
         self._admit_many_fn = jax.jit(self._admit_many, donate_argnums=(0,))
         self._prefill_fn = jax.jit(self._prefill)
@@ -250,6 +424,20 @@ class ServingEngine:
             self._admit_fn = self._timed(self._admit_fn, "prefill_secs")
             self._admit_many_fn = self._timed(self._admit_many_fn,
                                               "prefill_secs")
+            if self._spec:
+                self._prefill_draft_fn = self._timed(self._prefill_draft_fn,
+                                                     "prefill_secs")
+                self._admit_draft_fn = self._timed(self._admit_draft_fn,
+                                                   "prefill_secs")
+                self._admit_draft_many_fn = self._timed(
+                    self._admit_draft_many_fn, "prefill_secs")
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of draft proposals the target accepted (drain-synced;
+        the ``prefill_calls``-style speculative counter)."""
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted \
+            else 0.0
 
     def _timed(self, fn, attr: str):
         import time
@@ -277,6 +465,17 @@ class ServingEngine:
                                 max_len=self.max_len, lengths=lengths,
                                 **self._mkw(), **self._attn_kw["prefill"])
 
+    def _dmkw(self) -> Dict[str, Any]:
+        # the drafter serves its own (serve-form) params: target deltas
+        # don't apply to it
+        return dict(policy=self.policy, deltas=None, dtype=self.dtype,
+                    matmul_mode=self.matmul_mode)
+
+    def _prefill_draft(self, dparams, toks, lengths=None):
+        return self.dmod.prefill(dparams, {"tokens": toks}, self.draft_cfg,
+                                 max_len=self.max_len, lengths=lengths,
+                                 **self._dmkw(), **self._dattn_kw["prefill"])
+
     def _tick(self, params, cache, tokens, active, emitted, budget, key):
         """Advance every active slot one token. Masks computed on-device."""
         logits, new_cache = self.mod.decode_step(params, cache, tokens,
@@ -288,6 +487,27 @@ class ServingEngine:
         done = active & ((emitted >= budget) | (nxt == self._eos()))
         new_cache["len"] = jnp.where(active, new_cache["len"], cache["len"])
         return new_cache, nxt[:, None], active & ~done, emitted, done
+
+    def _spec_tick(self, params, dparams, cache, dcache, tokens, active,
+                   emitted, budget, key):
+        """Advance every active slot by 1..spec_k+1 tokens: the shared
+        ``spec_decode_tick`` core (draft chain -> one multi-token verify ->
+        vectorized acceptance -> per-slot rollback of both caches) plus the
+        engine's budget/EOS window truncation, all in this ONE jitted call.
+        Inactive slots are frozen in-graph: their verify scratch-writes are
+        fully rewound and their token/length held, exactly like the plain
+        tick's masking."""
+        from repro.serving.spec import emit_counts, spec_decode_tick
+        cache, dcache, a, out, new_tok = spec_decode_tick(
+            self.mod, self.dmod, params, dparams, self.cfg, self.draft_cfg,
+            cache, dcache, tokens, active, spec_k=self.spec_k,
+            temperature=self.temperature, key=key, mkw=self._mkw(),
+            dmkw=self._dmkw(), attn_kw=self._attn_kw["decode"],
+            dattn_kw=self._dattn_kw["decode"])
+        n, done = emit_counts(out, a, active=active, emitted=emitted,
+                              budget=budget, eos_id=self._eos())
+        return (cache, dcache, new_tok, active & ~done, emitted + n, done,
+                out, n, jnp.where(active, a, 0))
 
     def _admit_device(self, params, cache, tokens, active, emitted, budget,
                       slot, src, logits0, req_budget, key):
@@ -332,9 +552,14 @@ class ServingEngine:
             raise ValueError("prompt must contain at least one token")
         if max_new < 1:
             raise ValueError(f"max_new must be >= 1, got {max_new}")
-        if len(prompt) + max_new > self.max_len:
-            raise ValueError(f"prompt+max_new {len(prompt) + max_new} exceeds "
-                             f"engine max_len {self.max_len}")
+        if len(prompt) + max_new + self.spec_k > self.max_len:
+            # speculative verify scratch-writes up to spec_k positions past
+            # the final committed token; reserve that headroom in the cache
+            total = len(prompt) + max_new + self.spec_k
+            label = (f"prompt+max_new+spec_k ({len(prompt)}+{max_new}"
+                     f"+{self.spec_k}={total})" if self._spec
+                     else f"prompt+max_new ({total})")
+            raise ValueError(f"{label} exceeds engine max_len {self.max_len}")
         self._uid += 1
         self.queue.append(Request(self._uid, list(prompt), max_new))
         return self._uid
@@ -359,8 +584,9 @@ class ServingEngine:
         if not self.queue:
             return
         free = self._free_slots()
-        if not free and self.eos_id is not None:
-            # an EOS may have freed a slot we haven't observed yet; _sync
+        if not free and (self.eos_id is not None or self._spec):
+            # an EOS — or, with speculation, a multi-token burst through the
+            # budget — may have freed a slot we haven't observed yet; _sync
             # keeps the finished requests queued for the next drain()
             self._sync()
             free = self._free_slots()
@@ -410,6 +636,15 @@ class ServingEngine:
             self.cache, self._tokens, self._active, self._emitted,
             self._budget, jnp.asarray(slot_map), src, logits0,
             jnp.asarray(budgets), k)
+        if self._spec:
+            # the drafter needs the prompt in ITS cache too (logits unused:
+            # the target samples every committed token). Rides the same
+            # admission round — prefill_calls counts rounds, not models.
+            _, dsrc = self._prefill_draft_fn(self.draft_params,
+                                             jnp.asarray(toks),
+                                             jnp.asarray(lens))
+            self.draft_cache = self._admit_draft_many_fn(
+                self.draft_cache, jnp.asarray(slot_map), dsrc)
         self._record_admitted(slot_ids, reqs)
 
     def _admit_solo(self, slot: int, req: Request):
@@ -424,6 +659,10 @@ class ServingEngine:
             self.params, self.cache, self._tokens, self._active,
             self._emitted, self._budget, jnp.asarray(slot, jnp.int32),
             src, logits0, jnp.asarray(req.max_new, jnp.int32), k)
+        if self._spec:
+            _, dsrc = self._prefill_draft_fn(self.draft_params, toks)
+            self.draft_cache = self._admit_draft_fn(
+                self.draft_cache, jnp.asarray(slot, jnp.int32), dsrc)
         self._record_admitted([slot], [req])
 
     def _record_admitted(self, slot_ids: List[int], reqs: List[Request]):
@@ -438,14 +677,15 @@ class ServingEngine:
             self._ticks_left[s] = r.max_new - 1
             mask_np[s] = True
         mask = jnp.asarray(mask_np)
-        self._pending.append((self._tokens[:, 0], mask, mask & ~self._active,
-                              tuple(self._slot_req)))
+        self._pending.append((self._tokens, mask, mask & ~self._active,
+                              tuple(self._slot_req), None, "admit"))
         for s in slot_ids:
             if self._ticks_left[s] <= 0:
                 self._slot_req[s] = None
 
     def step(self):
-        """Admit, then advance ALL active slots with ONE jitted decode call.
+        """Admit, then advance ALL active slots with ONE jitted decode call
+        (speculative mode: up to spec_k+1 tokens per slot, still one call).
 
         Asynchronous: emitted tokens stay on device until ``drain()``.
         """
@@ -455,11 +695,21 @@ class ServingEngine:
         emitted_mask = self._active                  # who emits this tick
         owners = tuple(self._slot_req)
         self._key, k = jax.random.split(self._key)
-        (self.cache, self._tokens, self._active, self._emitted,
-         done) = self._tick_fn(self.params, self.cache, self._tokens,
-                               self._active, self._emitted, self._budget, k)
+        if self._spec:
+            (self.cache, self.draft_cache, self._tokens, self._active,
+             self._emitted, done, out_toks, counts, accepted) = self._tick_fn(
+                self.params, self.draft_params, self.cache, self.draft_cache,
+                self._tokens, self._active, self._emitted, self._budget, k)
+            self._pending.append((out_toks, counts, done, owners, accepted,
+                                  "tick"))
+        else:
+            (self.cache, self._tokens, self._active, self._emitted,
+             done) = self._tick_fn(self.params, self.cache, self._tokens,
+                                   self._active, self._emitted, self._budget,
+                                   k)
+            self._pending.append((self._tokens, emitted_mask, done, owners,
+                                  None, "tick"))
         self.decode_calls += 1
-        self._pending.append((self._tokens[:, 0], emitted_mask, done, owners))
         for s in range(self.slots):
             if self._slot_req[s] is not None:
                 self._ticks_left[s] -= 1
@@ -470,18 +720,34 @@ class ServingEngine:
         """Bulk-sync everything emitted since the last sync; attribute
         tokens to requests via per-tick owner snapshots. Newly finished
         requests accumulate in ``_finished`` until ``drain()`` hands them
-        out (an internal sync must never lose them)."""
+        out (an internal sync must never lose them).
+
+        Records carry variable per-slot token counts (speculative ticks emit
+        1..spec_k+1 tokens per slot); ONE ``device_get`` moves every pending
+        array to the host, so the async no-per-token-sync property holds in
+        both modes. Per-request tick/accept-histogram stats and the engine's
+        ``spec_drafted``/``spec_accepted`` counters are folded in here."""
         if not self._pending:
             return
-        toks = np.asarray(jnp.stack([p[0] for p in self._pending]))
-        masks = np.asarray(jnp.stack([p[1] for p in self._pending]))
-        dones = np.asarray(jnp.stack([p[2] for p in self._pending]))
-        for t, (_, _, _, owners) in enumerate(self._pending):
-            for s in np.nonzero(masks[t])[0]:
+        moved = jax.device_get([(toks, counts, done,
+                                 () if acc is None else acc)
+                                for toks, counts, done, _, acc, _
+                                in self._pending])
+        for (toks, counts, done, acc), (_, _, _, owners, _, kind) in zip(
+                moved, self._pending):
+            for s in np.nonzero(counts)[0]:
                 req = owners[s]
                 if req is not None:
-                    req.out.append(int(toks[t, s]))
-            for s in np.nonzero(dones[t])[0]:
+                    n = int(counts[s])
+                    req.out.extend(int(x) for x in toks[s, :n])
+                    if kind == "tick":
+                        req.ticks += 1
+                        req.accept_hist[n] = req.accept_hist.get(n, 0) + 1
+            if not isinstance(acc, tuple):            # speculative tick
+                live = np.asarray(counts) > 0
+                self.spec_drafted += int(self.spec_k * live.sum())
+                self.spec_accepted += int(np.asarray(acc)[live].sum())
+            for s in np.nonzero(done)[0]:
                 req = owners[s]
                 if req is not None and not req.done:
                     req.done = True

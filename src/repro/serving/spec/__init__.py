@@ -1,0 +1,84 @@
+"""Self-speculative serving: the 3-bit model drafts, full precision verifies.
+
+The paper's central trade — an aggressively quantized fixed-point network is
+nearly free to evaluate yet barely loses accuracy — makes the quantized
+serve forms the ideal *drafters* for the full-precision weights they were
+derived from. Instead of accepting the (small) accuracy delta of serving
+``qp`` directly, speculative decoding turns it into a throughput multiplier
+for the ``w`` form: each tick the packed-3-bit drafter proposes K tokens
+through the existing fused-kernel decode path, the target model scores all
+K+1 positions in ONE batched multi-token ``verify_step``, and vectorized
+acceptance-rejection sampling keeps the longest prefix the target agrees
+with — by construction the emitted stream follows the TARGET distribution
+exactly at any temperature (token-identical to non-spec greedy at T=0).
+
+Pieces (all pure functions of device arrays — one jitted tick composes
+them, no per-draft-token host sync):
+
+  draft.py   ``draft_chain``: K+1 sequential drafter ``decode_step`` calls
+             under ``lax.scan`` (the +1 keeps the drafter's cache entry for
+             its own last proposal, so an all-accepted tick never leaves the
+             draft cache short), stacking state snapshots for stateful
+             (hybrid) drafters.
+  verify.py  ``verify_tokens``: assembles [committed token, drafts] and runs
+             the target's multi-token ``verify_step`` against the live
+             cache.
+  accept.py  ``spec_accept``: exact acceptance-rejection sampling (greedy
+             prefix match at T=0, ratio-test + residual-distribution
+             resampling at T>0) and ``emit_counts``: per-slot budget/EOS
+             truncation of the emitted window.
+
+Rejected suffixes are undone by ``models.api.rollback_cache`` (length
+rewind + wiped-entry zeroing + hybrid SSM-state snapshot select); the
+``ssm`` family rejects spec mode loudly — its SSD state can't rewind.
+
+``spec_decode_tick`` composes the four: it is THE tick core, shared by
+``ServingEngine._spec_tick`` and the jitted ``generate(spec_k=)`` loop so
+the subtle commit-length/rollback arithmetic exists exactly once.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.serving.spec.accept import emit_counts, spec_accept
+from repro.serving.spec.draft import draft_chain
+from repro.serving.spec.verify import verify_tokens
+
+__all__ = ["draft_chain", "verify_tokens", "spec_accept", "emit_counts",
+           "spec_decode_tick"]
+
+
+def spec_decode_tick(mod, dmod, params, dparams, cfg, dcfg, cache, dcache,
+                     pending, active, *, spec_k: int, temperature: float,
+                     key, mkw, dmkw, attn_kw=None, dattn_kw=None):
+    """One speculative tick: draft -> verify -> accept -> rollback of BOTH
+    caches. Pure function of device arrays (callers jit it, alone or inside
+    a while_loop).
+
+    ``pending`` (B, 1) is each row's sampled-but-unfed token; ``active``
+    (B,) rows advance, inactive rows are frozen (their scratch-writes fully
+    rewound, their pending token held). Returns ``(cache, dcache,
+    accept_len (B,), out_tokens (B, spec_k+1), new_pending (B, 1))`` —
+    budget/EOS window truncation (``emit_counts``) is the caller's, since
+    only it knows the budget semantics.
+
+    Commit arithmetic (the one copy of it): both caches advanced by
+    ``spec_k+1`` writes in lockstep, and the committed stream grows by the
+    pending token plus ``accept_len`` accepted drafts, so active rows
+    rewind to ``len - (spec_k+1) + 1 + accept_len`` and inactive rows all
+    the way back to ``len - (spec_k+1)``.
+    """
+    kd, ka = jax.random.split(key)
+    dcache, dtraj, drafts, dlogits = draft_chain(
+        dmod, dparams, dcache, pending, dcfg, spec_k=spec_k,
+        temperature=temperature, key=kd, mkw=dmkw, attn_kw=dattn_kw)
+    tlogits, cache, vtraj = verify_tokens(params, cache, pending, drafts,
+                                          cfg, **mkw, **(attn_kw or {}))
+    a, out, nxt = spec_accept(drafts, dlogits, tlogits,
+                              temperature=temperature, key=ka)
+    t1 = spec_k + 1
+    rows = jnp.arange(pending.shape[0])
+    commit = jnp.where(active, cache["len"] - t1 + 1 + a, cache["len"] - t1)
+    cache = mod.rollback_cache(cache, rows, commit, vtraj)
+    dcache = dmod.rollback_cache(dcache, rows, commit, dtraj)
+    new_pending = jnp.where(active[:, None], nxt[:, None], pending)
+    return cache, dcache, a, out, new_pending

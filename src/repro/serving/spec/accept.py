@@ -1,0 +1,105 @@
+"""Acceptance-rejection sampling for speculative decoding — exact in the
+target distribution (Leviathan et al. / Chen et al. speculative sampling):
+
+  * T=0: draft ``x_i`` is accepted iff it equals the target argmax after
+    consuming ``x_1..x_{i-1}``; the first mismatch position emits the target
+    argmax instead. The committed stream is therefore token-identical to
+    non-speculative greedy decode.
+  * T>0: draft ``x_i`` is accepted with probability
+    ``min(1, p_t(x_i) / p_d(x_i))``; on rejection the replacement token is
+    drawn from the residual ``norm(max(p_t - p_d, 0))``, and when all K
+    drafts are accepted a bonus token is drawn from the target's K+1-th
+    distribution. Marginally each emitted token is distributed exactly as
+    the target model's ``softmax(logits / T)`` — verified empirically by
+    tests/test_spec_accept.py.
+
+Everything is vectorized over the batch/slot dimension: an engine tick
+computes acceptance for every slot in-graph, with no host sync.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["spec_accept", "emit_counts"]
+
+_TINY = 1e-30
+
+
+def spec_accept(draft_toks: jnp.ndarray, draft_logits: jnp.ndarray,
+                target_logits: jnp.ndarray, *, temperature: float,
+                key) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Vectorized acceptance-rejection over a (B, K) draft window.
+
+    ``draft_toks`` (B, K) int32; ``draft_logits`` (B, K, V) the drafter's
+    logits that produced them; ``target_logits`` (B, K+1, V) from
+    ``verify_step`` (position ``i`` = target distribution after consuming
+    draft ``i``, position K = the bonus distribution).
+
+    Returns ``(accept_len (B,), out_tokens (B, K+1), next_pending (B,))``:
+    ``accept_len`` = a in [0, K] accepted drafts; ``out_tokens[:, :a+1]``
+    is the emitted window (accepted drafts + one correction/bonus token,
+    which is also ``next_pending`` — the next tick's input).
+    """
+    b, k = draft_toks.shape
+    steps = jnp.arange(k + 1)
+    if temperature == 0.0:
+        t_hat = jnp.argmax(target_logits, axis=-1)             # (B, K+1)
+        match = draft_toks == t_hat[:, :k]
+        a = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+        extra = jnp.take_along_axis(t_hat, a[:, None], axis=1)[:, 0]
+    else:
+        k_acc, k_res = jax.random.split(key)
+        pt = jax.nn.softmax(target_logits / temperature, axis=-1)
+        pd = jax.nn.softmax(draft_logits / temperature, axis=-1)
+        ptx = jnp.take_along_axis(pt[:, :k], draft_toks[..., None],
+                                  axis=-1)[..., 0]             # (B, K)
+        pdx = jnp.take_along_axis(pd, draft_toks[..., None],
+                                  axis=-1)[..., 0]
+        u = jax.random.uniform(k_acc, (b, k))
+        # accept iff u < p_t(x)/p_d(x); multiplied form avoids the divide
+        acc = u * jnp.maximum(pdx, _TINY) < ptx
+        a = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+        # replacement: residual norm(max(p_t - p_d, 0)) at the rejection
+        # position; bonus draw from the K+1-th target distribution when
+        # every draft was accepted
+        pt_a = jnp.take_along_axis(pt, a[:, None, None], axis=1)[:, 0]
+        pd_a = jnp.take_along_axis(pd, jnp.minimum(a, k - 1)[:, None, None],
+                                   axis=1)[:, 0]
+        res = jnp.maximum(pt_a - pd_a, 0.0)
+        rsum = jnp.sum(res, axis=-1, keepdims=True)
+        # rsum == 0 <=> p_t == p_d pointwise, where rejection has
+        # probability 0 — the p_t fallback only guards the impossible draw
+        res = jnp.where(rsum > 0, res / jnp.maximum(rsum, _TINY), pt_a)
+        dist = jnp.where((a >= k)[:, None], pt_a, res)
+        extra = jax.random.categorical(k_res, jnp.log(dist + _TINY), axis=-1)
+    padded = jnp.concatenate([draft_toks, extra[:, None]], axis=1)
+    out = jnp.where(steps[None, :] < a[:, None], padded, extra[:, None])
+    return a, out.astype(jnp.int32), extra.astype(jnp.int32)
+
+
+def emit_counts(out_tokens: jnp.ndarray, accept_len: jnp.ndarray, *,
+                active: jnp.ndarray, emitted: jnp.ndarray,
+                budget: jnp.ndarray, eos_id: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Truncate each slot's emitted window to its remaining budget and its
+    first EOS — the variable-tokens-per-tick generalization of the engine's
+    on-device termination masks.
+
+    Returns ``(n_emit (B,), done (B,))``: inactive slots emit 0; active
+    slots emit ``min(accept_len + 1, budget - emitted)`` tokens, cut at the
+    first EOS inside that window (``eos_id < 0`` never matches). ``done``
+    marks slots whose request finished this tick (budget reached or EOS).
+    """
+    b, t1 = out_tokens.shape
+    steps = jnp.arange(t1)
+    n = jnp.minimum(accept_len + 1, budget - emitted)          # >= 1 if active
+    hit = (out_tokens == eos_id) & (steps[None, :] < n[:, None])
+    first = jnp.min(jnp.where(hit, steps[None, :], t1), axis=1)
+    eos_hit = first < n
+    n = jnp.where(eos_hit, first + 1, n)
+    n = jnp.where(active, n, 0)
+    done = active & ((emitted + n >= budget) | eos_hit)
+    return n, done

@@ -1,0 +1,60 @@
+"""Draft phase: K proposals from the quantized drafter, one ``lax.scan``.
+
+The drafter runs the EXISTING single-token decode path (fused Pallas
+qmatvec/qmatmul + decode-attention kernels for ``qp`` params), so drafting
+inherits every serving optimization; the scan makes the whole chain one
+traced region inside the engine's jitted tick — no per-draft-token host
+dispatch.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["draft_chain"]
+
+
+def draft_chain(mod, draft_params, dcache, pending: jnp.ndarray, dcfg, *,
+                spec_k: int, temperature: float, key,
+                mkw: dict, attn_kw: Optional[dict] = None):
+    """Run ``spec_k + 1`` drafter decode steps from the committed stream.
+
+    ``pending`` (B, 1): the last sampled-but-not-yet-fed token. Step ``j``
+    consumes the previous token and samples proposal ``x_{j+1}``; the chain
+    deliberately runs ONE step past the K proposals so the drafter's cache
+    also holds the entry for its own last proposal ``x_K`` — otherwise an
+    all-accepted tick would leave the draft cache one entry short of the
+    committed stream (the classic drafter-lag bug). The final step's sample
+    is discarded.
+
+    Returns ``(dcache, trajectory, drafts (B, K), draft_logits (B, K, V))``
+    where ``trajectory`` stacks the drafter's rollback state snapshots
+    (``mod.spec_state_snapshot``) with the pre-draft state first — None for
+    stateless-KV drafters.
+    """
+    snap0 = mod.spec_state_snapshot(dcache)
+    keys = jax.random.split(key, spec_k + 1)
+
+    def step(carry, k_):
+        dc, cur = carry
+        logits, dc = mod.decode_step(draft_params, dc, cur, dcfg, **mkw,
+                                     **(attn_kw or {}))
+        lg = logits[:, 0]
+        if temperature == 0.0:
+            nxt = jnp.argmax(lg, axis=-1)
+        else:
+            nxt = jax.random.categorical(k_, lg / temperature, axis=-1)
+        nxt = nxt[:, None].astype(jnp.int32)
+        return (dc, nxt), (lg, nxt[:, 0], mod.spec_state_snapshot(dc))
+
+    (dcache, _), (logits, toks, snaps) = jax.lax.scan(
+        step, (dcache, pending), keys)
+    trajectory = None
+    if snap0 is not None:
+        trajectory = jax.tree_util.tree_map(
+            lambda init, s: jnp.concatenate([init[None], s]), snap0, snaps)
+    drafts = toks[:spec_k].T                                   # (B, K)
+    draft_logits = logits[:spec_k].transpose(1, 0, 2)          # (B, K, V)
+    return dcache, trajectory, drafts, draft_logits

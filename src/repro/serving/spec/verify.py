@@ -1,0 +1,29 @@
+"""Verify phase: one batched multi-token target pass over [pending, drafts].
+
+Thin assembly over ``models.api.verify_step`` — the causal-masked
+multi-token decode entry point each family implements (``ssm`` raises).
+Position ``t`` of the returned logits is the target's distribution over the
+token following input ``t``, which is exactly what acceptance-rejection
+needs: logits 0..K-1 judge drafts 1..K and logits K supply the bonus token
+when everything is accepted.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models import api as model_api
+
+__all__ = ["verify_tokens"]
+
+
+def verify_tokens(params, cache, pending: jnp.ndarray, drafts: jnp.ndarray,
+                  cfg, **kw):
+    """Score K drafts with one target pass.
+
+    ``pending`` (B, 1) is the committed-but-unfed token, ``drafts`` (B, K)
+    the drafter's proposals. Returns ``(target_logits (B, K+1, V),
+    new_cache, trajectory)`` — the cache advances by K+1 written positions
+    (rolled back to the accepted prefix afterwards).
+    """
+    inputs = jnp.concatenate([pending, drafts], axis=1)        # (B, K+1)
+    return model_api.verify_step(params, cache, inputs, cfg, **kw)

@@ -1,0 +1,149 @@
+"""Acceptance-rejection sampling (serving/spec/accept.py): the speculative
+sampling lemma — emitted tokens follow the TARGET distribution exactly —
+checked empirically at temperature > 0, plus the deterministic greedy
+(T=0) prefix-match semantics and the budget/EOS window truncation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from _hypothesis_stub import given, settings, st
+
+from repro.serving.spec import emit_counts, spec_accept
+
+
+def _greedy_case():
+    """Hand-built (B=3, K=3, V=8) case with known accept lengths."""
+    v = 8
+    t_hat = np.array([[1, 2, 3, 4],       # target argmax per position
+                      [5, 6, 7, 0],
+                      [2, 2, 2, 2]])
+    target_logits = np.zeros((3, 4, v), np.float32)
+    for b in range(3):
+        for i in range(4):
+            target_logits[b, i, t_hat[b, i]] = 5.0
+    drafts = np.array([[1, 2, 3],         # all match -> a=3, bonus 4
+                       [5, 9, 7],         # mismatch at i=1 -> a=1, emits 6
+                       [3, 2, 2]])        # mismatch at i=0 -> a=0, emits 2
+    return jnp.asarray(drafts), jnp.asarray(target_logits)
+
+
+def test_greedy_accept_prefix_semantics():
+    drafts, tlogits = _greedy_case()
+    dlogits = jnp.zeros((3, 3, 8), jnp.float32)   # unused at T=0
+    a, out, nxt = spec_accept(drafts, dlogits, tlogits, temperature=0.0,
+                              key=jax.random.PRNGKey(0))
+    assert list(np.asarray(a)) == [3, 1, 0]
+    out = np.asarray(out)
+    # emitted windows: accepted drafts + the target's correction/bonus
+    assert list(out[0, :4]) == [1, 2, 3, 4]
+    assert list(out[1, :2]) == [5, 6]
+    assert list(out[2, :1]) == [2]
+    assert list(np.asarray(nxt)) == [4, 6, 2]     # next tick's pending token
+
+
+def test_greedy_equals_sequential_greedy_stream():
+    """The committed window [drafts[:a], correction] is exactly what
+    sequential argmax decoding over the same logits would emit."""
+    drafts, tlogits = _greedy_case()
+    dlogits = jnp.zeros((3, 3, 8), jnp.float32)
+    a, out, _ = spec_accept(drafts, dlogits, tlogits, temperature=0.0,
+                            key=jax.random.PRNGKey(0))
+    t_hat = np.asarray(jnp.argmax(tlogits, -1))
+    for b in range(3):
+        n = int(a[b]) + 1
+        # sequential greedy: token i is target argmax after consuming the
+        # previous target tokens — within the accepted prefix the draft IS
+        # that argmax, so the streams coincide position by position
+        assert list(np.asarray(out)[b, :n]) == list(t_hat[b, :n])
+
+
+def test_selfdraft_always_accepts_at_any_temperature():
+    """draft logits == target logits => acceptance probability 1 (the
+    residual-distribution branch must not fire on the p_t == p_d case)."""
+    key = jax.random.PRNGKey(3)
+    logits = jax.random.normal(key, (2, 5, 16))
+    drafts = jax.random.randint(jax.random.PRNGKey(4), (2, 4), 0, 16)
+    for temp in (0.7, 1.0, 2.5):
+        a, _, _ = spec_accept(drafts, logits[:, :4], logits,
+                              temperature=temp, key=jax.random.PRNGKey(5))
+        # at T>0 drafts came from the draft distribution; here they are
+        # arbitrary tokens, but the RATIO p_t/p_d == 1 regardless
+        assert list(np.asarray(a)) == [4, 4]
+
+
+def test_emitted_matches_target_distribution():
+    """Speculative sampling lemma, empirically: the FIRST emitted token
+    (accepted draft or residual resample) is distributed as the target's
+    softmax — not the drafter's — for a deliberately mismatched drafter."""
+    v, temp, n = 6, 0.8, 8000
+    kt, kd, kx, ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    tlogits = jax.random.normal(kt, (1, 2, v)) * 1.5
+    dlogits = jax.random.normal(kd, (1, 1, v)) * 1.5      # mismatched draft
+    p_d = jax.nn.softmax(dlogits[0, 0] / temp)
+    p_t = np.asarray(jax.nn.softmax(tlogits[0, 0] / temp))
+
+    def one(key):
+        k_draft, k_acc = jax.random.split(key)
+        # the draft token must come from the DRAFT distribution — that's
+        # the lemma's hypothesis
+        x = jax.random.categorical(k_draft, dlogits[0, 0] / temp)
+        _, out, _ = spec_accept(x[None, None], dlogits, tlogits,
+                                temperature=temp, key=k_acc)
+        return out[0, 0]
+
+    toks = np.asarray(jax.vmap(one)(jax.random.split(ks, n)))
+    emp = np.bincount(toks, minlength=v) / n
+    tv = 0.5 * np.abs(emp - p_t).sum()
+    # sanity: the drafter alone would NOT pass this gate
+    tv_draft = 0.5 * np.abs(np.asarray(p_d) - p_t).sum()
+    assert tv < 0.05, (tv, emp, p_t)
+    assert tv_draft > 0.15, "degenerate case: drafter too close to target"
+
+
+def test_emit_counts_budget_and_eos():
+    out = jnp.asarray([[10, 11, 12, 13],      # budget cuts at 2
+                       [10, 99, 12, 13],      # EOS (99) at index 1
+                       [10, 11, 12, 13],      # inactive -> 0
+                       [10, 11, 12, 99]])     # EOS beyond window: no hit
+    a = jnp.asarray([3, 3, 3, 1])
+    active = jnp.asarray([True, True, False, True])
+    emitted = jnp.asarray([5, 1, 1, 1])
+    budget = jnp.asarray([7, 16, 16, 16])
+    n, done = emit_counts(out, a, active=active, emitted=emitted,
+                          budget=budget, eos_id=99)
+    assert list(np.asarray(n)) == [2, 2, 0, 2]
+    assert list(np.asarray(done)) == [True, True, False, False]
+
+
+def test_emit_counts_no_eos_sentinel():
+    """eos_id=-1 (engine's 'no EOS' sentinel) never truncates."""
+    out = jnp.asarray([[3, 4, 5]])
+    n, done = emit_counts(out, jnp.asarray([2]),
+                          active=jnp.asarray([True]),
+                          emitted=jnp.asarray([1]), budget=jnp.asarray([99]),
+                          eos_id=-1)
+    assert int(n[0]) == 3 and not bool(done[0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6), st.integers(2, 9))
+def test_accept_invariants_random(seed, k, v):
+    """For arbitrary logits: a in [0, K]; the emitted window starts with
+    exactly the a accepted drafts; next_pending is the window's last
+    emitted token (at T=0 AND T>0)."""
+    kt, kd, kx, ka = jax.random.split(jax.random.PRNGKey(seed), 4)
+    tlogits = jax.random.normal(kt, (2, k + 1, v))
+    dlogits = jax.random.normal(kd, (2, k, v))
+    drafts = jax.random.randint(kx, (2, k), 0, v)
+    for temp in (0.0, 0.9):
+        a, out, nxt = spec_accept(drafts, dlogits, tlogits,
+                                  temperature=temp, key=ka)
+        a, out, nxt = np.asarray(a), np.asarray(out), np.asarray(nxt)
+        for b in range(2):
+            assert 0 <= a[b] <= k
+            assert list(out[b, :a[b]]) == list(np.asarray(drafts)[b, :a[b]])
+            assert out[b, a[b]] == nxt[b]

@@ -1,0 +1,213 @@
+"""``rollback_cache`` — the speculative-rejection primitive — across
+dense/hybrid x plain/int8-KV x sliding-window ring: wiped suffixes are
+exactly un-written (values AND per-token scales), entries below the rewind
+point are untouched, zero-distance/out-of-range rewinds are identities, and
+decoding after a partial rollback continues exactly like a stream that
+never speculated. The ``ssm`` family must refuse the whole spec surface."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.precision import FLOAT
+from repro.models import api as model_api
+from repro.models import get_model
+
+ARCH_FOR = {"dense": "qwen2-1.5b", "ssm": "mamba2-2.7b",
+            "hybrid": "zamba2-1.2b"}
+
+
+def _setup(family, sliding=0):
+    layers = 4 if family == "hybrid" else 2
+    cfg = reduced(get_config(ARCH_FOR[family]), layers=layers, d_model=32,
+                  vocab=64)
+    if sliding:
+        cfg = dataclasses.replace(cfg, sliding_window=sliding)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prefill_verify(cfg, params, quant, max_len=20, t=3):
+    mod = get_model(cfg)
+    toks = jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], jnp.int32)
+    kw = {"quantize_cache": True} if quant else {}
+    # per-row lengths: the slot-major shape the engine serves (and keeps
+    # the rollback identity checks exact — rollback returns per-row len)
+    _, cache = mod.prefill(params, {"tokens": toks}, cfg, policy=FLOAT,
+                           dtype=jnp.float32, max_len=max_len,
+                           lengths=jnp.asarray([4, 4]), **kw)
+    vtoks = jnp.asarray([[9 + i for i in range(t)]] * 2, jnp.int32)
+    _, vcache, traj = mod.verify_step(params, cache, vtoks, cfg,
+                                      policy=FLOAT, dtype=jnp.float32)
+    return mod, cache, vcache, traj
+
+
+def _kv(cfg, cache):
+    return cache["kv"] if cfg.family == "hybrid" else cache
+
+
+def _tree_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+@pytest.mark.parametrize("quant", [False, True])
+def test_rollback_wipes_suffix_keeps_prefix(family, quant):
+    cfg, params = _setup(family)
+    mod, cache, vcache, traj = _prefill_verify(cfg, params, quant)
+    base = jnp.broadcast_to(cache["len"], (2,)).astype(jnp.int32)
+    rb = mod.rollback_cache(vcache, jnp.arange(2), base + 1, traj)
+    names = ("k", "v") + (("k_scale", "v_scale") if quant else ())
+    for name in names:
+        a = np.asarray(_kv(cfg, rb)[name])
+        b = np.asarray(_kv(cfg, vcache)[name])
+        # entries at positions < base+1 (kept) are byte-identical ...
+        assert np.array_equal(a[:, :, :5], b[:, :, :5]), name
+        # ... and the rejected band [base+1, base+3) is zeroed — including
+        # the int8 scale arrays, so cache and scales stay consistent
+        assert not a[:, :, 5:7].any(), name
+    assert list(np.asarray(rb["len"])) == [5, 5]
+    if family == "hybrid":
+        # state after 1 accepted token == snapshot 1 of the trajectory
+        want = jax.tree_util.tree_map(lambda x: x[1], traj["groups"])
+        assert _tree_equal(rb["groups"], want)
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+@pytest.mark.parametrize("quant", [False, True])
+def test_zero_and_oob_rewind_are_identity(family, quant):
+    cfg, params = _setup(family)
+    mod, cache, vcache, traj = _prefill_verify(cfg, params, quant)
+    cur = jnp.broadcast_to(vcache["len"], (2,)).astype(jnp.int32)
+    # zero-distance rewind: new_lens == current lengths
+    same = mod.rollback_cache(vcache, jnp.arange(2), cur, traj)
+    assert _tree_equal(same, vcache)
+    # out-of-range slot entries are dropped (nothing rewinds)
+    oob = mod.rollback_cache(vcache, jnp.asarray([7, 9]),
+                             jnp.zeros((2,), jnp.int32), traj)
+    assert _tree_equal(oob, vcache)
+    # rewinding "forward" (new_len > current) clamps to identity
+    fwd = mod.rollback_cache(vcache, jnp.arange(2), cur + 3, traj)
+    assert _tree_equal(fwd, vcache)
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+@pytest.mark.parametrize("quant", [False, True])
+def test_decode_after_rollback_matches_unspeculated(family, quant):
+    """The functional contract: accept j of the verified tokens, roll back,
+    decode one more — logits match a stream that decoded the j tokens
+    sequentially and never saw the rejected suffix."""
+    cfg, params = _setup(family)
+    mod, cache, vcache, traj = _prefill_verify(cfg, params, quant)
+    base = jnp.broadcast_to(cache["len"], (2,)).astype(jnp.int32)
+    nxt = jnp.asarray([[30], [30]], jnp.int32)
+    for j in (1, 2):
+        rb = mod.rollback_cache(vcache, jnp.arange(2), base + j, traj)
+        seq = cache
+        for t in range(j):
+            _, seq = mod.decode_step(params, seq,
+                                     jnp.asarray([[9 + t]] * 2, jnp.int32),
+                                     cfg, policy=FLOAT, dtype=jnp.float32)
+        la, _ = mod.decode_step(params, rb, nxt, cfg, policy=FLOAT,
+                                dtype=jnp.float32)
+        lb, _ = mod.decode_step(params, seq, nxt, cfg, policy=FLOAT,
+                                dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=2e-5, rtol=0)
+
+
+@pytest.mark.parametrize("quant", [False, True])
+def test_rollback_swa_ring(quant):
+    """Sliding-window arch: the cache is a position-mod-window ring. Within
+    the engine's no-wrap regime (max_len <= window) rollback must wipe the
+    correct ring band and keep decode-after-rollback exact."""
+    cfg, params = _setup("dense", sliding=24)
+    assert get_model(cfg).cache_len_for(cfg, 20) == 20   # ring layout, no wrap
+    mod, cache, vcache, traj = _prefill_verify(cfg, params, quant,
+                                               max_len=20)
+    base = jnp.broadcast_to(cache["len"], (2,)).astype(jnp.int32)
+    rb = mod.rollback_cache(vcache, jnp.arange(2), base + 1, traj)
+    names = ("k", "v") + (("k_scale", "v_scale") if quant else ())
+    for name in names:
+        a = np.asarray(rb[name])
+        assert np.array_equal(a[:, :, :5], np.asarray(vcache[name])[:, :, :5])
+        assert not a[:, :, 5:7].any(), name
+    la, _ = mod.decode_step(params, rb, jnp.asarray([[30]] * 2, jnp.int32),
+                            cfg, policy=FLOAT, dtype=jnp.float32)
+    seq = cache
+    _, seq = mod.decode_step(params, seq, jnp.asarray([[9]] * 2, jnp.int32),
+                             cfg, policy=FLOAT, dtype=jnp.float32)
+    lb, _ = mod.decode_step(params, seq, jnp.asarray([[30]] * 2, jnp.int32),
+                            cfg, policy=FLOAT, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), atol=2e-5,
+                               rtol=0)
+
+
+def test_api_dispatch_and_ssm_rejection():
+    """models.api routes the spec primitives; ssm refuses all of them."""
+    cfg, params = _setup("dense")
+    mod = get_model(cfg)
+    toks = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    _, cache = mod.prefill(params, {"tokens": toks}, cfg, policy=FLOAT,
+                           dtype=jnp.float32, max_len=16)
+    _, vcache, traj = model_api.verify_step(params, cache,
+                                            jnp.asarray([[5, 6]], jnp.int32),
+                                            cfg, policy=FLOAT,
+                                            dtype=jnp.float32)
+    rb = model_api.rollback_cache(cfg, vcache, jnp.arange(1),
+                                  jnp.asarray([4]), traj)
+    assert int(rb["len"][0]) == 4
+    assert model_api.spec_state_snapshot(cfg, cache) is None
+
+    scfg, sparams = _setup("ssm")
+    smod = get_model(scfg)
+    state = model_api.init_cache(scfg, 1, 16, jnp.float32)
+    with pytest.raises(ValueError, match="ssm"):
+        model_api.verify_step(sparams, state, toks[:, :2], scfg,
+                              policy=FLOAT)
+    with pytest.raises(ValueError, match="rewound|rewind"):
+        model_api.rollback_cache(scfg, state, jnp.arange(1),
+                                 jnp.asarray([1]))
+    with pytest.raises(ValueError, match="ssm"):
+        model_api.spec_state_snapshot(scfg, state)
+
+
+def test_draft_of_derives_qp_drafter():
+    """Any checkpoint yields a qp drafter (no second training run); the
+    half-depth variant slices the stacked layer axis and stays runnable."""
+    from repro.core import quant_dense
+    cfg, params = _setup("dense")
+    dcfg, dparams = model_api.draft_of(cfg, params)
+    assert dcfg == cfg
+    assert quant_dense.is_serve_form(dparams)
+    # already-exported trees pass through un-re-exported
+    dcfg2, again = model_api.draft_of(cfg, dparams)
+    assert again is dparams and dcfg2 == cfg
+    # half depth: layer stack sliced, config follows, model still decodes
+    hcfg, hparams = model_api.draft_of(cfg, params, depth_fraction=0.5)
+    assert hcfg.num_layers == cfg.num_layers // 2
+    lg, cache = get_model(hcfg).prefill(
+        hparams, {"tokens": jnp.asarray([[1, 2, 3]], jnp.int32)}, hcfg,
+        policy=FLOAT, dtype=jnp.float32, max_len=8)
+    assert lg.shape == (1, 1, cfg.vocab_size)
+    with pytest.raises(ValueError, match="depth_fraction"):
+        model_api.draft_of(cfg, params, depth_fraction=0.0)
+
+
+def test_draft_of_half_depth_hybrid():
+    cfg, params = _setup("hybrid")
+    n_groups = cfg.num_layers // cfg.attn_every
+    hcfg, hparams = model_api.draft_of(cfg, params, depth_fraction=0.5)
+    kept = max(1, n_groups // 2)
+    assert (hcfg.num_layers
+            == kept * cfg.attn_every + cfg.num_layers % cfg.attn_every)
+    lg, _ = get_model(hcfg).prefill(
+        hparams, {"tokens": jnp.asarray([[1, 2, 3]], jnp.int32)}, hcfg,
+        policy=FLOAT, dtype=jnp.float32, max_len=8)
+    assert lg.shape == (1, 1, cfg.vocab_size)

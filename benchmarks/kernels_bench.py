@@ -17,11 +17,27 @@ and three implementations per case:
                   path; timed only with --smoke-size shapes (interpret is an
                   emulator, its timings are not meaningful)
 
-The attention case mirrors one engine decode tick (B=slots rows at mixed
-valid lengths against a (B, S, KV, D) cache, bf16-class AND int8+scales):
-the fused ``kernels.attn_decode`` Pallas kernel (interpret mode) is
-parity-checked against BOTH its pure-jnp oracle (``attn_decode/ref.py``)
-and the production einsum path (``models.attention.decode_attention``).
+The attention cases mirror the three attention serving paths:
+
+  decode        one engine tick — B=slots rows at mixed valid lengths
+                against a (B, S, KV, D) cache; the fused
+                ``kernels.attn_decode`` kernel (interpret mode) is
+                parity-checked against BOTH its pure-jnp oracle
+                (``attn_decode/ref.py``) and the production einsum path
+                (``models.attention.decode_attention``).
+  prefill       one bucketed admission — T x T prompt self-attention at
+                T in {128, 512, 2048} (smoke: 24) with mixed per-row
+                prompt lengths; the blocked online-softmax
+                ``kernels.attn_prefill`` kernel is parity-checked against
+                its einsum oracle (``attn_prefill/ref.py``) for bf16-class
+                AND int8 KV, and each row's derived field quantifies the
+                fp32 score-tensor bytes the einsum materializes in HBM vs
+                the one VMEM tile the kernel holds.
+  verify        one speculative tick — T = spec_k+1 in {3, 5} query rows
+                against the live cache at mixed per-row frontiers; same
+                kernel (T-row specialization), parity-checked against the
+                oracle and the production guarded einsum
+                (``models.attention.verify_attention``).
 
 Every kernel case is PARITY-CHECKED; any mismatch exits nonzero, which is
 the CI kernel-regression gate (`--smoke`). Results are written to a JSON
@@ -54,6 +70,16 @@ SMOKE_CASES = [("decode", 8, 96, 128), ("prefill", 8 * 16, 96, 128)]
 # attn_decode shapes: (B=slots, S cache, H heads, KV heads, D head_dim)
 ATTN_FULL = (8, 512, 8, 2, 64)
 ATTN_SMOKE = (8, 96, 8, 2, 16)
+
+# attn_prefill shapes: (B, T) bucketed-admission self-attention (S = T) and
+# (B, T, S) speculative verify (T = spec_k+1 rows against the live cache);
+# heads (H, KV, D) shared
+PREFILL_FULL = [(4, 128), (4, 512), (1, 2048)]
+PREFILL_SMOKE = [(2, 24)]
+VERIFY_FULL = [(8, 3, 512), (8, 5, 512)]
+VERIFY_SMOKE = [(4, 3, 48)]
+PF_HEADS_FULL = (8, 2, 64)
+PF_HEADS_SMOKE = (4, 2, 16)
 
 
 def _time(fn, *args, reps=10):
@@ -131,6 +157,103 @@ def attn_cases(smoke: bool = False):
     return rows, parity
 
 
+def attn_prefill_cases(smoke: bool = False):
+    """Blocked prefill/verify attention: kernel (interpret) vs its einsum
+    oracle (attn_prefill/ref.py), bf16-class and int8 KV, mixed per-row
+    lengths/frontiers; derived fields quantify the fp32 score bytes the
+    einsum puts in HBM vs the single VMEM tile the kernel holds."""
+    from repro.kernels.attn_prefill.ops import attn_prefill
+    from repro.kernels.attn_prefill.ref import attn_prefill_ref
+    from repro.models.attention import verify_attention
+    from repro.models.transformer import _quantize_kv
+
+    h, kv, d = PF_HEADS_SMOKE if smoke else PF_HEADS_FULL
+    g = h // kv
+    reps = 3 if smoke else 10
+    rows, parity = [], []
+
+    def oracle(q, k, v, hi, ks_=None, vs_=None):
+        b, t = q.shape[:2]
+        qg = (q * (d ** -0.5)).reshape(b, t, kv, g, d)
+        lo = jnp.zeros((b, t), jnp.int32)
+        return attn_prefill_ref(qg, k, v, lo, hi, ks_,
+                                vs_).reshape(q.shape)
+
+    def one(tag, q, k, v, hi, ks_=None, vs_=None):
+        """Parity-check one case; returns (kernel_fn, shape+derived str)."""
+        b, t = q.shape[:2]
+        s = k.shape[1]
+        f_kn = jax.jit(lambda *a: attn_prefill(
+            a[0], a[1], a[2], a[3], k_scale=a[4] if len(a) > 4 else None,
+            v_scale=a[5] if len(a) > 5 else None, interpret=True))
+        args = (q, k, v, hi) + (() if ks_ is None else (ks_, vs_))
+        out = f_kn(*args)
+        ref = oracle(q, k, v, hi, ks_, vs_)
+        err = float(jnp.max(jnp.abs(out - ref)))
+        ok = bool(np.allclose(np.asarray(out), np.asarray(ref),
+                              rtol=1e-4, atol=1e-4))
+        parity.append({"case": tag, "max_abs_err": err, "ok": ok})
+        ein_mb = b * kv * g * t * s * 4 / 2 ** 20     # (B,KV,G,T,S) fp32
+        tile_kb = min(128, t) * g * min(128, s) * 4 / 2 ** 10
+        shape = (f"shape={b}x{t}x{s}x{h}x{kv}x{d};"
+                 f"score_einsum_MB={ein_mb:.2f};score_tile_KB={tile_kb:.1f}")
+        return f_kn, args, shape
+
+    # bucketed admission: T x T self-attention, mixed per-row prompt lengths
+    for b, t in (PREFILL_SMOKE if smoke else PREFILL_FULL):
+        ks3 = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks3[0], (b, t, h, d))
+        kc = jax.random.normal(ks3[1], (b, t, kv, d))
+        vc = jax.random.normal(ks3[2], (b, t, kv, d))
+        lens = jnp.maximum((jnp.arange(b) + 1) * t // b, 1).astype(jnp.int32)
+        pos = jnp.arange(t, dtype=jnp.int32)
+        hi = jnp.minimum(pos[None, :] + 1, lens[:, None])
+        kq, ksc = _quantize_kv(kc)
+        vq, vsc = _quantize_kv(vc)
+        for name, args in (("bf16", (q, kc, vc, hi)),
+                           ("int8", (q, kq, vq, hi, ksc, vsc))):
+            f_kn, full_args, shape = one(f"attn_prefill.T{t}.{name}", *args)
+            f_ein = jax.jit(lambda *a: oracle(*a))
+            rows.append((f"kernel.cpu.attn_prefill.T{t}.{name}.einsum",
+                         _time(f_ein, *args, reps=reps), shape))
+            rows.append((f"kernel.cpu.attn_prefill.T{t}.{name}"
+                         f".kernel.interpret",
+                         _time(f_kn, *full_args, reps=reps), shape))
+
+    # speculative verify: T = spec_k+1 rows against the live cache
+    for b, t, s in (VERIFY_SMOKE if smoke else VERIFY_FULL):
+        ks3 = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = jax.random.normal(ks3[0], (b, t, h, d))
+        kc = jax.random.normal(ks3[1], (b, s, kv, d))
+        vc = jax.random.normal(ks3[2], (b, s, kv, d))
+        pos0 = ((jnp.arange(b) * (s // b)) % (s - t)).astype(jnp.int32)
+        valid = pos0[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :] + 1
+        kq, ksc = _quantize_kv(kc)
+        vq, vsc = _quantize_kv(vc)
+        for name, args in (("bf16", (q, kc, vc, valid)),
+                           ("int8", (q, kq, vq, valid, ksc, vsc))):
+            f_kn, full_args, shape = one(f"attn_verify.T{t}.{name}", *args)
+            out = f_kn(*full_args)
+            # also gate against the PRODUCTION guarded-einsum verify path
+            scales = args[4:] if len(args) > 4 else (None, None)
+            ein = verify_attention(args[0], args[1], args[2], args[3],
+                                   *scales, mode="ref")
+            err = float(jnp.max(jnp.abs(out - ein)))
+            ok = bool(np.allclose(np.asarray(out), np.asarray(ein),
+                                  rtol=1e-4, atol=1e-4))
+            parity.append({"case": f"attn_verify.T{t}.{name}.vs_production",
+                           "max_abs_err": err, "ok": ok})
+            f_ein = jax.jit(lambda a0, a1, a2, a3, *sc: verify_attention(
+                a0, a1, a2, a3, *sc, mode="ref"))
+            rows.append((f"kernel.cpu.attn_verify.T{t}.{name}.einsum",
+                         _time(f_ein, *args, reps=reps), shape))
+            if smoke:
+                rows.append((f"kernel.cpu.attn_verify.T{t}.{name}"
+                             f".kernel.interpret",
+                             _time(f_kn, *full_args, reps=reps), shape))
+    return rows, parity
+
+
 def run_cases(smoke: bool = False):
     rows, parity = [], []
     reps = 3 if smoke else 10
@@ -158,7 +281,8 @@ def run_cases(smoke: bool = False):
                 rows.append((f"kernel.cpu.{case}.kernel.{form}.interpret",
                              _time(f_kn, x, reps=reps), shape))
     arows, aparity = attn_cases(smoke=smoke)
-    return rows + arows, parity + aparity
+    prows, pparity = attn_prefill_cases(smoke=smoke)
+    return rows + arows + prows, parity + aparity + pparity
 
 
 def run(smoke: bool = True):

@@ -9,6 +9,12 @@ weights PLUS the KV cache, so each arch gets KV-cache bytes per token for
 the bf16 cache vs the engine's ``kv_bits=8`` form (int8 entries + one fp32
 k/v scale per layer-token) — the number that decides how many decode slots
 a fixed cache budget holds.
+
+Each attention arch also gets the prefill score-tensor comparison: admitting
+a 2048-token prompt through the einsum path materializes a per-layer
+(KV, G, T, S) fp32 score tensor per sequence, while the blocked Pallas
+prefill kernel holds one (bt, G, bs) fp32 tile in VMEM — the HBM round-trip
+the kernel eliminates (``pf32MB`` vs ``tileKB`` columns).
 """
 from __future__ import annotations
 
@@ -32,6 +38,24 @@ def kv_bytes_per_token(cfg, kv_bits: int = 16) -> int:
     if kv_bits == 8:
         return layers * (per_layer + 2 * 4)                # int8 + 2 scales
     return layers * per_layer * kv_bits // 8
+
+def prefill_score_bytes(cfg, t: int = 2048, bt: int = 128,
+                        bs: int = 128) -> tuple[int, int]:
+    """fp32 attention-score bytes live while admitting a ``t``-token prompt
+    (per layer, per sequence): einsum path vs the blocked prefill kernel.
+
+    The einsum reference builds the full (KV, G, T, S) score tensor with
+    S = T; the kernel's online softmax only ever holds one (bt, G, bs)
+    tile in VMEM (kernel block sizes clamp to the sequence). SSM archs
+    have no attention — (0, 0).
+    """
+    if cfg.family == "ssm":
+        return 0, 0
+    g = cfg.num_heads // cfg.num_kv_heads
+    einsum = cfg.num_kv_heads * g * t * t * 4
+    tile = min(bt, t) * g * min(bs, t) * 4
+    return einsum, tile
+
 
 BRAM_BYTES = 2.18 * 2**20            # XC7Z045 (paper §2.1)
 VMEM_BYTES = 16 * 2**20              # v5e per-chip VMEM class
@@ -65,6 +89,7 @@ def rows():
         cfg = get_config(arch)
         n = cfg.param_count()
         w3_dev = bytes_for(n, 3) / CHIPS
+        score_einsum, score_tile = prefill_score_bytes(cfg)
         out.append({
             "net": arch, "weights_M": n / 1e6,
             "fp32_MB": bytes_for(n, 32) / 2**20,
@@ -75,6 +100,10 @@ def rows():
             "fits_hbm_per_dev": w3_dev <= HBM_BYTES,
             "kv_bf16_per_tok_B": kv_bytes_per_token(cfg, 16),
             "kv_int8_per_tok_B": kv_bytes_per_token(cfg, 8),
+            # 2048-token admission, per layer per sequence: the einsum
+            # score tensor the blocked prefill kernel never materializes
+            "prefill_score_einsum_MB": score_einsum / 2**20,
+            "prefill_score_tile_KB": score_tile / 2**10,
         })
     return out
 
@@ -82,15 +111,18 @@ def rows():
 def main():
     rs = rows()
     print(f"{'net':28s} {'Mw':>8s} {'fp32MB':>8s} {'w8MB':>8s} {'w3MB':>8s} "
-          f"{'kv16B/t':>8s} {'kv8B/t':>7s}  verdict")
+          f"{'kv16B/t':>8s} {'kv8B/t':>7s} {'pf32MB':>7s} {'tileKB':>7s}  "
+          f"verdict")
     for r in rs:
         if "fits_bram_w3" in r:
-            kv = f"{'—':>8s} {'—':>7s}"
+            kv = f"{'—':>8s} {'—':>7s} {'—':>7s} {'—':>7s}"
             v = (f"BRAM(2.18MB): w8={'FITS' if r['fits_bram_w8'] else 'NO'} "
                  f"w3={'FITS' if r['fits_bram_w3'] else 'NO'}  <- paper Table 1")
         else:
             kv = (f"{r['kv_bf16_per_tok_B']:>8d} "
-                  f"{r['kv_int8_per_tok_B']:>7d}")
+                  f"{r['kv_int8_per_tok_B']:>7d} "
+                  f"{r['prefill_score_einsum_MB']:>7.0f} "
+                  f"{r['prefill_score_tile_KB']:>7.0f}")
             v = (f"w3/dev={r['w3_per_dev_MB']:.0f}MB on 256 chips: "
                  f"VMEM={'FITS' if r['fits_vmem_per_dev'] else 'no'} "
                  f"HBM={'FITS' if r['fits_hbm_per_dev'] else 'NO'}")

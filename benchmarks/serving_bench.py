@@ -27,6 +27,15 @@ the decode-attention dispatch (auto/kernel/ref — the fused Pallas
 int8 KV cache; every row reports the shared-cache bytes per slot, which
 kv8 halves (twice the slots per fixed cache budget).
 
+``--mix long`` swaps the short-prompt traffic for 1k–4k-token prompts
+(admission buckets 1024/2048/4096), the regime where prefill attention
+dominates admission cost: the einsum path materializes an O(T^2) fp32 score
+tensor per sequence while the blocked Pallas kernel (``--attn-mode
+kernel``) keeps one (bt, G, bs) tile in VMEM — the ``pfill_s`` column is
+the number that moves. The long mix defaults to fewer slots/requests, one
+repeat and a 256-token ``--attn-chunk`` (caps the ref-mode chunked-prefill
+working set; the engine threads it through to ``chunked_attention``).
+
 ``--spec-k K`` adds the speculative-serving axis: a packed-3-bit drafter
 derived from the same checkpoint (``api.draft_of``; ``--draft-depth`` for
 the half-depth variant) proposes K tokens per tick and the swept form
@@ -61,28 +70,38 @@ from repro.core.precision import FLOAT, W3A8
 from repro.models import get_model
 from repro.serving.engine import ServingEngine
 
-# mixed prompt lengths cycling over both admission buckets (<=8 and 9..16)
-MIX_LENGTHS = [3, 8, 5, 12, 4, 16, 7, 9]
-MAX_PROMPT = max(MIX_LENGTHS)
+MIXES = {
+    # short prompts cycling over both small admission buckets (<=8, 9..16)
+    "mixed": [3, 8, 5, 12, 4, 16, 7, 9],
+    # 1k-4k prompts (buckets 1024/2048/4096): admission time is dominated
+    # by prefill attention, the regime the blocked kernel exists for
+    "long": [1024, 2048, 1536, 4096],
+}
+# per-mix defaults for the knobs whose sensible values depend on prompt
+# scale: (slots, requests, max_new, repeats, attn_chunk)
+MIX_DEFAULTS = {
+    "mixed": ("1,4,8,16", 16, 24, 3, 1024),
+    "long": ("1,2", 4, 8, 1, 256),
+}
 
 
-def _prompts(requests: int):
+def _prompts(requests: int, lengths):
     return [[(i * 7 + j) % 50 + 1
-             for j in range(MIX_LENGTHS[i % len(MIX_LENGTHS)])]
+             for j in range(lengths[i % len(lengths)])]
             for i in range(requests)]
 
 
-def _engine(params, cfg, policy, slots, max_new, matmul_mode="auto",
-            attn_mode="auto", kv_bits=None, spec_k=0, draft=None,
-            profile=True):
+def _engine(params, cfg, policy, slots, max_prompt, max_new,
+            matmul_mode="auto", attn_mode="auto", kv_bits=None, spec_k=0,
+            draft=None, profile=True, attn_chunk=1024):
     return ServingEngine(params, cfg, policy=policy, slots=slots,
-                         max_len=MAX_PROMPT + max_new + 1 + spec_k,
+                         max_len=max_prompt + max_new + 1 + spec_k,
                          dtype=jnp.float32, matmul_mode=matmul_mode,
                          attn_mode=attn_mode, kv_bits=kv_bits,
                          spec_k=spec_k,
                          draft_params=draft[1] if draft else None,
                          draft_cfg=draft[0] if draft else None,
-                         profile=profile)
+                         profile=profile, attn_chunk=attn_chunk)
 
 
 def _cache_bytes_per_slot(eng: ServingEngine) -> int:
@@ -94,24 +113,25 @@ def _cache_bytes_per_slot(eng: ServingEngine) -> int:
 
 
 def bench_form(params, cfg, policy, *, slots: int, requests: int,
-               max_new: int, repeats: int = 3,
+               max_new: int, lengths, repeats: int = 3,
                matmul_mode: str = "auto", attn_mode: str = "auto",
                kv_bits=None, spec_k: int = 0, draft=None,
-               profile: bool = True) -> dict:
+               profile: bool = True, attn_chunk: int = 1024) -> dict:
     # warmup on the SAME engine instance that gets timed: the jitted
     # prefill/tick closures are per-engine, so a throwaway warmup engine
-    # would leave the timed run paying compile time. One prompt per length
-    # bucket compiles both batched-prefill entries.
-    eng = _engine(params, cfg, policy, slots, max_new, matmul_mode,
-                  attn_mode, kv_bits, spec_k, draft, profile)
-    eng.submit([1] * 4, max_new=max_new)
-    eng.submit([1] * 12, max_new=max_new)
+    # would leave the timed run paying compile time. One prompt per
+    # admission bucket the mix touches compiles every batched-prefill entry.
+    eng = _engine(params, cfg, policy, slots, max(lengths), max_new,
+                  matmul_mode, attn_mode, kv_bits, spec_k, draft, profile,
+                  attn_chunk)
+    for bucket in sorted({eng._bucket_len(n) for n in lengths}):
+        eng.submit([1] * bucket, max_new=max_new)
     eng.run_all()
 
     # best-of-N: CPU wall-clock noise (scheduler, allocator) easily exceeds
     # the 4->8-slot amortization step on sub-second runs; min time is the
     # standard denoiser
-    prompts = _prompts(requests)
+    prompts = _prompts(requests, lengths)
     ptoks = sum(len(p) for p in prompts)
     best = None
     for _ in range(repeats):
@@ -151,13 +171,23 @@ def bench_form(params, cfg, policy, *, slots: int, requests: int,
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--slots", default="1,4,8,16",
-                    help="comma-separated slot counts to sweep")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--mix", default="mixed", choices=sorted(MIXES),
+                    help="request traffic: 'mixed' short prompts over the "
+                         "small admission buckets, 'long' 1k-4k prompts "
+                         "where prefill attention dominates admission")
+    ap.add_argument("--slots", default=None,
+                    help="comma-separated slot counts to sweep "
+                         "(default per mix: mixed=1,4,8,16 long=1,2)")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
     ap.add_argument("--forms", default="qp,q,w")
-    ap.add_argument("--repeats", type=int, default=3,
-                    help="timed repetitions per config; best run reported")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="timed repetitions per config; best run reported "
+                         "(default per mix: mixed=3 long=1)")
+    ap.add_argument("--attn-chunk", type=int, default=None,
+                    help="ref-mode chunked-prefill query-chunk length "
+                         "(bounds the einsum score working set; default "
+                         "per mix: mixed=1024 long=256)")
     ap.add_argument("--matmul-mode", default="auto",
                     choices=["auto", "kernel", "dequant"],
                     help="quantized-matmul dispatch for the q/qp forms "
@@ -192,6 +222,19 @@ def main():
                     help="JSON artifact path ('' disables)")
     args = ap.parse_args()
 
+    lengths = MIXES[args.mix]
+    d_slots, d_requests, d_max_new, d_repeats, d_chunk = MIX_DEFAULTS[args.mix]
+    if args.slots is None:
+        args.slots = d_slots
+    if args.requests is None:
+        args.requests = d_requests
+    if args.max_new is None:
+        args.max_new = d_max_new
+    if args.repeats is None:
+        args.repeats = d_repeats
+    if args.attn_chunk is None:
+        args.attn_chunk = d_chunk
+
     cfg = reduced(get_config(args.arch), layers=args.layers,
                   d_model=args.d_model, vocab=args.vocab)
     params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
@@ -212,8 +255,8 @@ def main():
 
     results: dict = {}
     print(f"{cfg.name} reduced(L={args.layers}, d={args.d_model}, "
-          f"V={args.vocab}), {args.requests} mixed-length requests "
-          f"(prompt lens {MIX_LENGTHS}) x {args.max_new} tokens")
+          f"V={args.vocab}), {args.requests} {args.mix}-mix requests "
+          f"(prompt lens {lengths}) x {args.max_new} tokens")
     kv_bits = 8 if args.kv8 else None
     print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
           f"{'prefills':>8} {'secs':>7} {'pfill_s':>7} {'dec_s':>7} "
@@ -223,11 +266,13 @@ def main():
         results[form] = []
         for slots in slot_counts:
             r = bench_form(p, cfg, pol, slots=slots, requests=args.requests,
-                           max_new=args.max_new, repeats=args.repeats,
+                           max_new=args.max_new, lengths=lengths,
+                           repeats=args.repeats,
                            matmul_mode=args.matmul_mode,
                            attn_mode=args.attn_mode, kv_bits=kv_bits,
                            spec_k=args.spec_k, draft=draft,
-                           profile=not args.no_profile)
+                           profile=not args.no_profile,
+                           attn_chunk=args.attn_chunk)
             results[form].append(r)
             print(f"{form:>4} {r['slots']:>5} {r['tokens']:>7} "
                   f"{r['ticks']:>6} {r['prefills']:>8} {r['secs']:>7.2f} "
@@ -242,7 +287,8 @@ def main():
             "reduced": {"layers": args.layers, "d_model": args.d_model,
                         "vocab": args.vocab},
             "requests": args.requests, "max_new": args.max_new,
-            "mix_lengths": MIX_LENGTHS, "repeats": args.repeats,
+            "mix": args.mix, "mix_lengths": lengths,
+            "repeats": args.repeats, "attn_chunk": args.attn_chunk,
             "matmul_mode": args.matmul_mode,
             "attn_mode": args.attn_mode, "kv_bits": kv_bits,
             "spec_k": args.spec_k, "draft_depth": args.draft_depth,

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the blocked prefill/verify attention kernel.
+
+Numerically what kernel.py computes, written as one dense einsum so tests
+can diff the two: fp32 scores, per-query [lo, hi) masking, guarded softmax
+(rows with an empty visible range produce zeros, not NaN or the uniform
+average), per-token int8 scale factoring in the exact same places (k_scale
+into the scores after QK^T, v_scale into the probabilities before PV).
+
+This IS the old einsum formulation the kernel replaces — it materializes
+the full (B, KV, G, T, S) score tensor, which is the point: ref.py is the
+parity oracle and the memory baseline, never the serving path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.attn_prefill.kernel import NEG_INF
+
+__all__ = ["attn_prefill_ref"]
+
+
+def attn_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lo: jnp.ndarray, hi: jnp.ndarray,
+                     k_scale: jnp.ndarray | None = None,
+                     v_scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """q (B, T, KV, G, D) PRE-SCALED by 1/sqrt(D); k/v (B, S, KV, D);
+    lo/hi (B, T) int32; optional (B, S) fp32 per-token scales. Returns
+    (B, T, KV, G, D) in q's dtype."""
+    b, t, kv, g, d = q.shape
+    s = k.shape[1]
+    lo = jnp.broadcast_to(jnp.asarray(lo, jnp.int32), (b, t))
+    hi = jnp.broadcast_to(jnp.asarray(hi, jnp.int32), (b, t))
+    kf = k.astype(q.dtype)
+    sc = jnp.einsum("btkgd,bskd->bkgts", q, kf,
+                    preferred_element_type=jnp.float32)
+    if k_scale is not None:
+        sc = sc * k_scale.astype(jnp.float32)[:, None, None, None, :]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    valid = ((pos[None, None, :] < hi[:, :, None])
+             & (pos[None, None, :] >= lo[:, :, None]))       # (B, T, S)
+    sc = jnp.where(valid[:, None, None], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.where(m > NEG_INF / 2, jnp.exp(sc - m), 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    vf = v.astype(q.dtype)
+    if v_scale is not None:
+        p = (p * v_scale.astype(jnp.float32)[:, None, None, None, :]
+             ).astype(q.dtype)
+    else:
+        p = p.astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, vf,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

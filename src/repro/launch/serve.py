@@ -43,8 +43,10 @@ def main():
                          "dequant fallback, or auto (kernel on TPU)")
     ap.add_argument("--attn-mode", default="auto",
                     choices=["auto", "kernel", "ref"],
-                    help="decode-attention dispatch: fused Pallas kernel, "
-                         "einsum reference, or auto (kernel on TPU)")
+                    help="attention dispatch for prefill admission, "
+                         "speculative verify AND per-token decode: Pallas "
+                         "kernels (blocked prefill/verify + fused decode), "
+                         "einsum/chunked reference, or auto (kernel on TPU)")
     ap.add_argument("--kv8", action="store_true",
                     help="serve from an int8 KV cache (per-token scales; "
                          "half the cache bytes per slot — attention "

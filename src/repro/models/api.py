@@ -33,14 +33,18 @@ expanded only in VMEM), 'dequant' runs the fused levels-matmul fallback, and
 fp32 weight matrix in the graph.
 
 The attention-bearing families (everything but ``ssm``) take two more
-serving knobs: ``decode_step(..., attn_mode="auto"|"kernel"|"ref")``
-dispatches decode attention between the fused Pallas
-``kernels.attn_decode`` kernel and the einsum reference
-(``models.attention.decode_attention``), and
+serving knobs. ``attn_mode="auto"|"kernel"|"ref"`` dispatches EVERY
+attention serving path between its Pallas kernel and the einsum/chunked
+reference: ``decode_step`` between the fused ``kernels.attn_decode``
+kernel and the einsum ref, and ``prefill`` / ``verify_step`` between the
+blocked online-softmax ``kernels.attn_prefill`` kernel (the (T, S) score
+tile stays in VMEM — no quadratic score tensor in HBM; per-row
+bucketed-prefill masking) and the chunked / guarded-einsum refs
+(``models.attention.prefill_attention`` / ``verify_attention``). And
 ``prefill(..., quantize_cache=True)`` / ``init_cache(..., kv_bits=8)``
 store the KV cache as int8 values + per-token fp32 scales (half the cache
-bytes per slot); the decode paths read the quantized cache directly under
-either attn_mode.
+bytes per slot); all attention paths read the quantized cache directly
+under either attn_mode.
 
 Speculative decoding adds three entry points (transformer-family + hybrid;
 ``ssm`` raises — its SSD state folds every token irreversibly):

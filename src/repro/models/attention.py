@@ -8,13 +8,24 @@ chunks). XLA fuses each chunk's QK^T+softmax+PV; on TPU the same structure is
 what a Pallas flash kernel would tile, so the dry-run HLO reflects realistic
 memory behaviour at 32k/500k sequence lengths.
 
-The decode step has an actual Pallas kernel: ``decode_attention`` dispatches
-on ``mode`` ("auto" | "kernel" | "ref", mirroring
-``quant_dense.serve_apply``) between the fused
-``repro.kernels.attn_decode`` kernel (QK^T -> online softmax -> PV in VMEM,
-per-row cache_len block skipping, int8-cache dequant epilogue; 'auto' picks
-it on TPU) and the plain-einsum reference below, which the kernel package's
-``ref.py`` oracle matches term for term.
+Three entry points are kernel-dispatched on ``mode`` ("auto" | "kernel" |
+"ref", mirroring ``quant_dense.serve_apply``; 'auto' picks the Pallas
+kernel on TPU, the einsum/chunked paths elsewhere):
+
+  * ``decode_attention`` -> ``repro.kernels.attn_decode`` (one q row per
+    step, QK^T -> online softmax -> PV in VMEM, per-row cache_len block
+    skipping, int8-cache dequant epilogue);
+  * ``prefill_attention`` -> ``repro.kernels.attn_prefill`` (blocked
+    online-softmax over (q block, key block) tiles; per-row rule: query t
+    sees key j iff j <= t AND j < lengths[row], i.e. causal within the
+    prompt and the padded tail masked per row; SWA raises the lower bound);
+  * ``verify_attention`` -> the same attn_prefill kernel with T = spec_k+1
+    query rows and hi = the per-row ``valid`` counts over the live cache.
+
+In every case the ref path is the plain einsum/chunked formulation below,
+which the kernel packages' ``ref.py`` oracles match term for term. Masked
+softmax rows that are entirely invalid (a zero-valid-length row from engine
+padding) produce zeros in both paths — never NaN or the uniform v average.
 """
 from __future__ import annotations
 
@@ -23,8 +34,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-__all__ = ["chunked_attention", "decode_attention", "sliding_window_attention",
-           "verify_attention", "resolve_attn_mode", "ATTN_MODES"]
+__all__ = ["chunked_attention", "decode_attention", "prefill_attention",
+           "sliding_window_attention", "verify_attention",
+           "resolve_attn_mode", "ATTN_MODES"]
 
 NEG_INF = -1e30
 
@@ -50,6 +62,17 @@ def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
 def _gqa_out(p: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
     """p (B,KV,G,Lq,Lc) x v (B,Lc,KV,D) -> (B,Lq,KV,G,D)."""
     return jnp.einsum("bkgqc,bckd->bqkgd", p, v)
+
+
+def _guarded_softmax(sc: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over the last axis of NEG_INF-masked fp32 scores with the
+    empty-row guard: a row whose every slot is masked would softmax to the
+    uniform average over v (exp(NEG_INF - NEG_INF) = 1 per slot — or NaN
+    with a true -inf fill); guarded rows produce exact zeros instead,
+    matching the attn_decode / attn_prefill kernels."""
+    m = jnp.max(sc, axis=-1, keepdims=True)
+    p = jnp.where(m > NEG_INF / 2, jnp.exp(sc - m), 0.0)
+    return p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
 
 
 def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -85,8 +108,11 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             mask = mask & (kv_pos[None, :] <= q_pos[:, None])
         s = jnp.where(mask[None, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[..., None])
-        corr = jnp.exp(m - m_new)
+        # empty-row guard: rows with no valid position yet (all-false mask,
+        # e.g. a negative q_offset) keep p = 0 instead of exp(0) = 1
+        alive = m_new > NEG_INF / 2
+        p = jnp.where(alive[..., None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.where(alive, jnp.exp(m - m_new), 1.0)
         l_new = l * corr + jnp.sum(p, axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bkgqc,bckd->bkgqd", p.astype(v.dtype), vb).astype(jnp.float32)
@@ -149,9 +175,48 @@ def sliding_window_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return out[:, :l].astype(q.dtype)
 
 
+def prefill_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      lengths=None, window: int = 0, mode: str = "auto",
+                      chunk: int = 1024,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Prompt self-attention for prefill/admission. q (B, T, H, D) against
+    k/v (B, T, KV, D); ``lengths`` (B,) optional per-row valid prompt
+    lengths (bucketed admission pads rows up to the bucket); ``window`` > 0
+    selects sliding-window masking.
+
+    'kernel' routes to ``repro.kernels.attn_prefill``: blocked online
+    softmax — the fp32 score tile never leaves VMEM, no (B, ..., T, T)
+    tensor in HBM — with the bucketed-prefill rule applied per row (query t
+    sees key j iff j <= t AND j < lengths[row]; SWA additionally requires
+    j > t - window) and DMA-level skipping of key blocks past each q
+    block's causal frontier. 'ref' is the chunked/SWA scan below; it masks
+    causally only — identical at every real query position (j <= t <
+    lengths already implies j < lengths), while padded-query rows (t >=
+    lengths[row]) may differ; their cache entries are masked downstream by
+    per-row lengths and overwritten as the row advances, so decoded tokens
+    agree. 'auto' picks the kernel on TPU."""
+    if resolve_attn_mode(mode) == "kernel":
+        from repro.kernels.attn_prefill.ops import attn_prefill
+        b, t = q.shape[0], q.shape[1]
+        pos = jnp.arange(t, dtype=jnp.int32)
+        hi = jnp.broadcast_to(pos[None, :] + 1, (b, t))
+        if lengths is not None:
+            lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+            hi = jnp.minimum(hi, lens[:, None])
+        lo = None
+        if window:
+            lo = jnp.broadcast_to(jnp.maximum(pos - (window - 1), 0)[None],
+                                  (b, t))
+        return attn_prefill(q, k, v, hi, lo=lo, interpret=interpret)
+    if window:
+        return sliding_window_attention(q, k, v, window=window, chunk=chunk)
+    return chunked_attention(q, k, v, causal=True, chunk=chunk)
+
+
 def verify_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      v_cache: jnp.ndarray, valid: jnp.ndarray,
-                     k_scale=None, v_scale=None) -> jnp.ndarray:
+                     k_scale=None, v_scale=None, *, mode: str = "auto",
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Multi-token decode attention for speculative verify. q: (B, T, H, D)
     against a (B, S, KV, D) cache; ``valid`` (B, T) is the number of visible
     cache entries per query (its own just-written position included), so the
@@ -159,9 +224,20 @@ def verify_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     live prefix — the bucketed-prefill masking rule applied to the decode
     cache. Term-for-term the T>1 generalization of :func:`decode_attention`'s
     reference path (same contractions, same int8 per-token scale factoring),
-    which keeps verify logits aligned with the sequential decode logits. Not
-    kernel-dispatched: T is tiny (spec_k+1) and runs once per tick."""
+    which keeps verify logits aligned with the sequential decode logits.
+
+    'kernel' routes to ``repro.kernels.attn_prefill`` as its T-row
+    specialization (T = spec_k+1, hi = ``valid``): no (B, ..., T, S) score
+    tensor in HBM and per-row DMA skipping of cache blocks past the causal
+    frontier — S is the full decode cache, so this bounds the verify
+    latency that caps speculative throughput. 'ref' is the einsum below
+    with the guarded softmax (zero-valid rows produce zeros, not NaN);
+    'auto' picks the kernel on TPU."""
     b, t, h, d = q.shape
+    if resolve_attn_mode(mode) == "kernel":
+        from repro.kernels.attn_prefill.ops import attn_prefill
+        return attn_prefill(q, k_cache, v_cache, valid, k_scale=k_scale,
+                            v_scale=v_scale, interpret=interpret)
     s, kvh = k_cache.shape[1], k_cache.shape[2]
     g = h // kvh
     scale = 1.0 / (d ** 0.5)
@@ -174,7 +250,7 @@ def verify_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     pos = jnp.arange(s)
     mask = pos[None, None, :] < valid[:, :, None]           # (B, T, S)
     sc = jnp.where(mask[:, None, None], sc, NEG_INF)
-    p = jax.nn.softmax(sc, axis=-1)
+    p = _guarded_softmax(sc)
     if v_scale is not None:
         p = (p * v_scale[:, None, None, None, :]).astype(q.dtype)
         out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(q.dtype))

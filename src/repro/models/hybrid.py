@@ -161,13 +161,18 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             max_len: Optional[int] = None, chunk: int = mamba2.DEFAULT_CHUNK,
             quantize_cache: bool = False,
             lengths: Optional[jnp.ndarray] = None,
-            matmul_mode: str = "auto"):
+            matmul_mode: str = "auto", attn_mode: str = "auto"):
     """``lengths`` (B,) enables right-padded multi-request prefill: mamba
     blocks mask the SSD recurrence / gather the true conv tail (see
     mamba2.block_apply), attention is causal so real positions never see the
     padding, and the junk K/V written at padded slots is masked out by decode
     (per-row ``len``) until overwritten. ``quantize_cache`` stores the KV
-    cache as int8 + per-token scales (see :func:`init_cache`)."""
+    cache as int8 + per-token scales (see :func:`init_cache`). ``attn_mode``
+    dispatches the shared-block prompt attention between the blocked Pallas
+    kernel and the chunked reference (see
+    :func:`repro.models.attention.prefill_attention`)."""
+    from repro.models.attention import resolve_attn_mode
+    attn_mode = resolve_attn_mode(attn_mode)
     n_groups, n_tail = _counts(cfg)
     bsz, s = batch["tokens"].shape
     max_len = max_len or s
@@ -189,7 +194,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
                                   mm=matmul_mode)
         hh, _, (k, v) = transformer._layer_forward(
             shared, sdelta, hh, cfg, policy, positions, inv_freq, attn_chunk,
-            matmul_mode)
+            matmul_mode, attn_mode, lengths)
         return hh, (mstates, k, v)
 
     gd = _dget(deltas, "groups")
@@ -373,7 +378,7 @@ def verify_step(params, state, tokens: jnp.ndarray, cfg: ModelConfig, *,
             kc = kc.at[rows, positions].set(k.astype(kc.dtype))
             vc = vc.at[rows, positions].set(v.astype(vc.dtype))
         o = verify_attention(q, kc, vc, positions + 1,
-                             k_scale=ks_, v_scale=vs_)
+                             k_scale=ks_, v_scale=vs_, mode=attn_mode)
         hh = hh + transformer._attn_out(shared, o, cfg, policy, sdelta, b, t,
                                         matmul_mode)
         hn = rmsnorm(shared["ln2"], hh, cfg.norm_eps)

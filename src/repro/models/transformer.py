@@ -24,9 +24,8 @@ from repro.core import quant_dense
 from repro.core.precision import QuantPolicy
 from repro.distributed.context import constrain
 from repro.models import moe as moe_mod
-from repro.models.attention import (chunked_attention, decode_attention,
-                                    sliding_window_attention,
-                                    verify_attention)
+from repro.models.attention import (decode_attention, prefill_attention,
+                                    resolve_attn_mode, verify_attention)
 from repro.models.layers import (apply_rope, embed_init, embed_lookup,
                                  head_rmsnorm, logits_readout, mlp_apply,
                                  mlp_init, rmsnorm, rmsnorm_init, rope_freqs)
@@ -125,15 +124,18 @@ def _ffn(lp, h, cfg: ModelConfig, policy, deltas, mm: str = "auto"):
 
 
 def _layer_forward(lp, ld, h, cfg: ModelConfig, policy, positions, inv_freq,
-                   attn_chunk: int, mm: str = "auto"):
+                   attn_chunk: int, mm: str = "auto", attn_mode: str = "ref",
+                   lengths=None):
+    """``attn_mode``/``lengths`` select the prefill-attention path: 'kernel'
+    is the blocked Pallas kernel with the per-row bucketed-prefill mask
+    (j <= t AND j < lengths[row]); 'ref' (the training default) the chunked
+    / SWA scans, causal-only."""
     b, s, _ = h.shape
     hn = rmsnorm(lp["ln1"], h, cfg.norm_eps)
     q, k, v = _qkv(lp, hn, cfg, policy, ld, positions, inv_freq, mm)
-    if cfg.sliding_window:
-        o = sliding_window_attention(q, k, v, window=cfg.sliding_window,
-                                     chunk=min(attn_chunk, s))
-    else:
-        o = chunked_attention(q, k, v, causal=True, chunk=min(attn_chunk, s))
+    o = prefill_attention(q, k, v, lengths=lengths,
+                          window=cfg.sliding_window or 0, mode=attn_mode,
+                          chunk=min(attn_chunk, s))
     h = h + _attn_out(lp, o, cfg, policy, ld, b, s, mm)
     h = constrain(h, "act")
     hn = rmsnorm(lp["ln2"], h, cfg.norm_eps)
@@ -230,7 +232,7 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
             attn_chunk: int = 1024, max_len: Optional[int] = None,
             quantize_cache: bool = False,
             lengths: Optional[jnp.ndarray] = None,
-            matmul_mode: str = "auto"):
+            matmul_mode: str = "auto", attn_mode: str = "auto"):
     """Run the prompt, build the KV cache. Returns (last_logits, cache).
 
     ``lengths`` (B,) enables right-padded multi-request prefill: row ``i``
@@ -240,7 +242,14 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     and ``cache["len"]`` is the per-row true length, so decode overwrites /
     masks the junk K/V at padded positions. Requires S <= cache length (the
     sliding-window ring-roll path is per-row-ambiguous under padding).
+
+    ``attn_mode`` ("auto" | "kernel" | "ref") picks the prompt
+    self-attention implementation — the blocked online-softmax Pallas
+    kernel (``kernels.attn_prefill``: no (B, ..., S, S) score tensor in
+    HBM, per-row length masking) or the chunked/SWA reference scans (see
+    :func:`repro.models.attention.prefill_attention`).
     """
+    attn_mode = resolve_attn_mode(attn_mode)
     h = _embed_input(params, batch, cfg, policy, deltas, dtype)
     s = h.shape[1]
     max_len = max_len or s
@@ -254,7 +263,8 @@ def prefill(params, batch, cfg: ModelConfig, *, policy: QuantPolicy,
     def body(hh, xs):
         lp, ld = xs
         hh, _, (k, v) = _layer_forward(lp, ld, hh, cfg, policy, positions,
-                                       inv_freq, attn_chunk, matmul_mode)
+                                       inv_freq, attn_chunk, matmul_mode,
+                                       attn_mode, lengths)
         # keep last `cs` positions (ring-start for SWA, whole seq otherwise)
         return hh, (k[:, -cs:], v[:, -cs:])
 
@@ -376,10 +386,13 @@ def verify_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
     into the cache (``len`` advances by T); rejected suffixes are undone with
     :func:`rollback_cache`. Attention uses the causal per-row masking of the
     bucketed-prefill path applied to the decode cache
-    (:func:`repro.models.attention.verify_attention`); ``attn_mode`` is
-    accepted for signature parity with ``decode_step`` but the tiny-T verify
-    matmul always takes the masked-einsum path. The trailing ``None`` is the
-    rollback trajectory slot (only stateful families need one — see hybrid).
+    (:func:`repro.models.attention.verify_attention`); ``attn_mode``
+    ("auto" | "kernel" | "ref") dispatches it between the blocked
+    ``kernels.attn_prefill`` Pallas kernel (T = spec_k+1 query rows, no
+    (B, ..., T, S) score tensor in HBM, per-row DMA skipping past the
+    causal frontier) and the guarded masked-einsum reference. The trailing
+    ``None`` is the rollback trajectory slot (only stateful families need
+    one — see hybrid).
     """
     b, t = tokens.shape
     pos0 = jnp.broadcast_to(cache["len"], (b,)).astype(jnp.int32)  # (B,)
@@ -413,7 +426,8 @@ def verify_step(params, cache, tokens: jnp.ndarray, cfg: ModelConfig, *,
             kc = kc.at[rows, slot].set(k.astype(kc.dtype))
             vc = vc.at[rows, slot].set(v.astype(vc.dtype))
         valid = jnp.minimum(positions + 1, cs)                     # (B, T)
-        o = verify_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_)
+        o = verify_attention(q, kc, vc, valid, k_scale=ks_, v_scale=vs_,
+                             mode=attn_mode)
         hh = hh + _attn_out(lp, o, cfg, policy, ld, b, t, matmul_mode)
         hn = rmsnorm(lp["ln2"], hh, cfg.norm_eps)
         f, _ = _ffn(lp, hn, cfg, policy, ld, matmul_mode)

@@ -108,9 +108,11 @@ def _attn_kwargs(cfg: ModelConfig, attn_mode: str,
                  kv_bits: Optional[int]) -> Dict[str, Dict[str, Any]]:
     """Validated per-call kwargs for the attention serving knobs.
 
-    ``attn_mode`` goes to ``decode_step`` and ``kv_bits=8`` turns into
-    ``prefill(quantize_cache=True)`` — both only for the attention-bearing
-    families; ``ssm`` takes neither (no decode attention, no KV cache), and
+    ``attn_mode`` goes to ``decode_step`` AND ``prefill`` (the blocked
+    Pallas prefill kernel covers admission; ``verify_step`` picks it up via
+    the decode kwargs), ``kv_bits=8`` turns into
+    ``prefill(quantize_cache=True)`` — all only for the attention-bearing
+    families; ``ssm`` takes neither (no attention, no KV cache), and
     asking it to quantize one is a config error, not a silent no-op.
     """
     from repro.models.attention import ATTN_MODES, resolve_attn_mode
@@ -125,8 +127,10 @@ def _attn_kwargs(cfg: ModelConfig, attn_mode: str,
             raise ValueError("kv_bits=8 is meaningless for family 'ssm': "
                              "it has no KV cache to quantize")
         return {"prefill": {}, "decode": {}}
-    return {"prefill": {"quantize_cache": True} if kv_bits == 8 else {},
-            "decode": {"attn_mode": attn_mode}}
+    pf: Dict[str, Any] = {"attn_mode": attn_mode}
+    if kv_bits == 8:
+        pf["quantize_cache"] = True
+    return {"prefill": pf, "decode": {"attn_mode": attn_mode}}
 
 
 def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
@@ -138,9 +142,12 @@ def generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
              draft_cfg: Optional[ModelConfig] = None) -> jnp.ndarray:
     """prompts (B, P) int32 -> (B, P + max_new_tokens). jit-compiled decode.
 
-    ``attn_mode`` picks the decode-attention implementation (fused Pallas
-    kernel / einsum ref / auto) and ``kv_bits=8`` serves from an int8 KV
-    cache — both only for the attention-bearing families (``ssm`` ignores
+    ``attn_mode`` picks the attention implementation on every serving path
+    — prefill admission and speculative verify (blocked online-softmax
+    ``kernels.attn_prefill`` vs chunked/einsum ref) as well as per-token
+    decode (fused ``kernels.attn_decode`` vs einsum ref); 'auto' takes the
+    kernels on TPU. ``kv_bits=8`` serves from an int8 KV cache. Both knobs
+    apply only to the attention-bearing families (``ssm`` ignores
     ``attn_mode`` and rejects ``kv_bits``).
 
     ``spec_k >= 1`` enables speculative decoding: ``draft_params`` (default:
@@ -328,7 +335,7 @@ class ServingEngine:
                  attn_mode: str = "auto", kv_bits: Optional[int] = None,
                  spec_k: int = 0, draft_params=None,
                  draft_cfg: Optional[ModelConfig] = None,
-                 profile: bool = False):
+                 attn_chunk: int = 1024, profile: bool = False):
         from repro.core.quant_dense import MATMUL_MODES
         if matmul_mode not in MATMUL_MODES:
             raise ValueError(f"matmul_mode must be one of {MATMUL_MODES}, "
@@ -343,10 +350,14 @@ class ServingEngine:
         self.eos_id = eos_id
         self.drain_every = max(1, drain_every)
         self.matmul_mode = matmul_mode
-        # decode-attention dispatch + int8 KV cache (attention families):
-        # kv_bits=8 halves cache bytes per slot, i.e. doubles the slots a
-        # fixed cache budget can hold — validated (ssm raises) in one place
+        # attention dispatch (prefill admission + verify + decode kernels
+        # vs ref paths) + int8 KV cache (attention families): kv_bits=8
+        # halves cache bytes per slot, i.e. doubles the slots a fixed cache
+        # budget can hold — validated (ssm raises) in one place.
+        # attn_chunk bounds the ref-mode prefill working set per KV chunk —
+        # the long-prompt admission knob when the kernel isn't available
         self.attn_mode, self.kv_bits = attn_mode, kv_bits
+        self.attn_chunk = attn_chunk
         self._attn_kw = _attn_kwargs(cfg, attn_mode, kv_bits)
         # shared slot-major cache, allocated ONCE
         self.cache = model_api.init_cache(cfg, slots, max_len, dtype,
@@ -463,6 +474,7 @@ class ServingEngine:
     def _prefill(self, params, toks, lengths=None):
         return self.mod.prefill(params, {"tokens": toks}, self.cfg,
                                 max_len=self.max_len, lengths=lengths,
+                                attn_chunk=self.attn_chunk,
                                 **self._mkw(), **self._attn_kw["prefill"])
 
     def _dmkw(self) -> Dict[str, Any]:
@@ -474,6 +486,7 @@ class ServingEngine:
     def _prefill_draft(self, dparams, toks, lengths=None):
         return self.dmod.prefill(dparams, {"tokens": toks}, self.draft_cfg,
                                  max_len=self.max_len, lengths=lengths,
+                                 attn_chunk=self.attn_chunk,
                                  **self._dmkw(), **self._dattn_kw["prefill"])
 
     def _tick(self, params, cache, tokens, active, emitted, budget, key):

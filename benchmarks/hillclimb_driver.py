@@ -13,7 +13,6 @@ Each entry: hypothesis -> change -> before -> after (dominant term) ->
 confirmed/refuted. Stops a ladder after 3 consecutive <5% improvements.
 """
 import dataclasses
-import json
 
 from repro.launch import hillclimb as hc
 

@@ -40,7 +40,10 @@ The attention cases mirror the three attention serving paths:
                 (``models.attention.verify_attention``).
 
 Every kernel case is PARITY-CHECKED; any mismatch exits nonzero, which is
-the CI kernel-regression gate (`--smoke`). Results are written to a JSON
+the CI kernel-regression gate (`--smoke`). Each kernel case also carries a
+``vmem_KB`` field — the static per-pallas_call on-chip working-set
+estimate from ``repro.analysis`` (the same estimator the contract
+linter's VMEM-budget pass gates on). Results are written to a JSON
 artifact (default ``BENCH_kernels.json``) and archived next to
 BENCH_serving.json.
 
@@ -60,8 +63,6 @@ import numpy as np
 from repro.core import quant_dense
 from repro.core.packing import pack_matrix
 from repro.core.precision import W3A8
-from repro.kernels.qmatmul.ops import qmatmul
-from repro.kernels.qmatvec.ops import qmatvec
 
 # serve-path shapes: slots=8 decode tick, 8 slots x 16-token bucket prefill
 FULL_CASES = [("decode", 8, 1024, 1024), ("prefill", 8 * 16, 1024, 1024)]
@@ -80,6 +81,21 @@ VERIFY_FULL = [(8, 3, 512), (8, 5, 512)]
 VERIFY_SMOKE = [(4, 3, 48)]
 PF_HEADS_FULL = (8, 2, 64)
 PF_HEADS_SMOKE = (4, 2, 16)
+
+
+def _vmem_kb(fn, *args):
+    """Static on-chip working-set estimate for every pallas_call in the
+    traced graph (repro.analysis: double-buffered block tiles + scratch,
+    read off the BlockSpecs/grid — nothing is executed). Returns the
+    LARGEST single kernel's estimate in KiB: kernels run one at a time,
+    so the max is what must fit VMEM."""
+    from repro.analysis.jaxpr_utils import find_pallas_eqns
+    from repro.analysis.vmem import pallas_vmem_estimate
+
+    jx = jax.make_jaxpr(lambda *a: fn(*a))(*args)
+    ests = [pallas_vmem_estimate(e)["vmem_bytes"]
+            for e in find_pallas_eqns(jx)]
+    return max(ests, default=0) / 2 ** 10
 
 
 def _time(fn, *args, reps=10):
@@ -142,18 +158,21 @@ def attn_cases(smoke: bool = False):
         out = f_kn(*args)
         ref = attn_decode_ref(*args)
         ein = decode_attention(*args, mode="ref")
+        vkb = _vmem_kb(f_kn, *args)
         for oracle, o in (("ref", ref), ("einsum", ein)):
             err = float(jnp.max(jnp.abs(out - o)))
             ok = bool(np.allclose(np.asarray(out), np.asarray(o),
                                   rtol=1e-4, atol=1e-4))
             parity.append({"case": f"attn_decode.{name}.vs_{oracle}",
-                           "max_abs_err": err, "ok": ok})
+                           "max_abs_err": err, "ok": ok,
+                           "vmem_kb": round(vkb, 1)})
         f_ref = jax.jit(lambda *a: decode_attention(*a, mode="ref"))
         rows.append((f"kernel.cpu.attn_decode.{name}.einsum",
                      _time(f_ref, *args, reps=reps), shape))
         if smoke:
             rows.append((f"kernel.cpu.attn_decode.{name}.kernel.interpret",
-                         _time(f_kn, *args, reps=reps), shape))
+                         _time(f_kn, *args, reps=reps),
+                         f"{shape};vmem_KB={vkb:.1f}"))
     return rows, parity
 
 
@@ -192,11 +211,14 @@ def attn_prefill_cases(smoke: bool = False):
         err = float(jnp.max(jnp.abs(out - ref)))
         ok = bool(np.allclose(np.asarray(out), np.asarray(ref),
                               rtol=1e-4, atol=1e-4))
-        parity.append({"case": tag, "max_abs_err": err, "ok": ok})
+        vkb = _vmem_kb(f_kn, *args)
+        parity.append({"case": tag, "max_abs_err": err, "ok": ok,
+                       "vmem_kb": round(vkb, 1)})
         ein_mb = b * kv * g * t * s * 4 / 2 ** 20     # (B,KV,G,T,S) fp32
         tile_kb = min(128, t) * g * min(128, s) * 4 / 2 ** 10
         shape = (f"shape={b}x{t}x{s}x{h}x{kv}x{d};"
-                 f"score_einsum_MB={ein_mb:.2f};score_tile_KB={tile_kb:.1f}")
+                 f"score_einsum_MB={ein_mb:.2f};score_tile_KB={tile_kb:.1f};"
+                 f"vmem_KB={vkb:.1f}")
         return f_kn, args, shape
 
     # bucketed admission: T x T self-attention, mixed per-row prompt lengths
@@ -276,10 +298,13 @@ def run_cases(smoke: bool = False):
             f_kn = jax.jit(lambda x, lf=leaf: quant_dense.serve_apply(
                 lf, x, mode="kernel", interpret=True))
             out = f_kn(x)
-            parity.append(_parity(case, form, leaf, x, out))
+            p = _parity(case, form, leaf, x, out)
+            p["vmem_kb"] = round(_vmem_kb(f_kn, x), 1)
+            parity.append(p)
             if smoke:
                 rows.append((f"kernel.cpu.{case}.kernel.{form}.interpret",
-                             _time(f_kn, x, reps=reps), shape))
+                             _time(f_kn, x, reps=reps),
+                             f"{shape};vmem_KB={p['vmem_kb']}"))
     arows, aparity = attn_cases(smoke=smoke)
     prows, pparity = attn_prefill_cases(smoke=smoke)
     return rows + arows + prows, parity + aparity + pparity

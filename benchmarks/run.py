@@ -10,8 +10,6 @@ Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
-import io
-import sys
 import traceback
 
 

@@ -10,9 +10,7 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import quant_dense
 from repro.core.precision import FLOAT, W3A8
 from repro.models import dnn
 

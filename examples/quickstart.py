@@ -5,8 +5,7 @@
 import jax
 import jax.numpy as jnp
 
-from repro.core import (W3A8, QuantSpec, fake_quant, optimal_uniform_delta,
-                        pack_matrix, quantize, unpack_matrix)
+from repro.core import QuantSpec, fake_quant, pack_matrix, quantize
 from repro.kernels.qmatmul.ops import qmatmul
 from repro.kernels.qmatvec.ops import qmatvec
 

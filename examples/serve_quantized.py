@@ -7,7 +7,6 @@ paper's Fig. 4 throughput argument.
     PYTHONPATH=src python examples/serve_quantized.py
 """
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.core import quant_dense

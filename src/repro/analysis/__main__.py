@@ -1,0 +1,92 @@
+"""``python -m repro.analysis``: sweep the serve-graph contracts.
+
+Traces every family x serve-form x mode contract point by abstract eval,
+runs the passes, and writes a JSON report. ``--check`` exits non-zero on
+any violated contract — the CI gate.
+
+    python -m repro.analysis --check --out analysis_report.json
+    python -m repro.analysis --families dense hybrid --modes kernel
+    python -m repro.analysis --check --exercise   # + live retrace budgets
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import contracts
+
+
+def _exercise_retrace():
+    """One micro serve (dense/qp/kernel, speculative) so the retrace
+    budgets in the report come from REAL compiled-trace counts, not just
+    the static graphs. Budgets: the tick compiles once; prefill/admit
+    once per admission bucket used (one here)."""
+    eng = contracts._engine("dense", "qp", "kernel", spec=True)
+    for _ in range(3):
+        eng.submit([1, 2, 3, 4], max_new=5)
+    eng.step()
+    eng.submit([4, 3, 2, 1], max_new=5)       # late wave, same bucket
+    eng.run_all()
+    budgets = {"tick": 1, "prefill": 1, "admit_many": 1,
+               "prefill_draft": 1, "admit_draft_many": 1}
+    return contracts.retrace_report(eng, budgets)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static serve-graph contract linter (see README "
+                    "'Static analysis & graph contracts').")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any contract is violated (CI gate)")
+    ap.add_argument("--families", nargs="+", default=list(contracts.FAMILIES),
+                    choices=list(contracts.FAMILIES))
+    ap.add_argument("--forms", nargs="+", default=list(contracts.FORMS),
+                    choices=list(contracts.FORMS))
+    ap.add_argument("--modes", nargs="+", default=list(contracts.MODES),
+                    choices=list(contracts.MODES))
+    ap.add_argument("--vmem-budget", type=int,
+                    default=contracts.DEFAULT_VMEM_BUDGET,
+                    help="per-kernel VMEM budget in bytes "
+                         "(default: %(default)s, one TPU core)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the JSON report here")
+    ap.add_argument("--exercise", action="store_true",
+                    help="also run one micro serve and report live jit "
+                         "retrace counts against budgets")
+    args = ap.parse_args(argv)
+
+    report = contracts.run_sweep(
+        args.families, args.forms, args.modes,
+        vmem_budget=args.vmem_budget,
+        progress=lambda combo: print(f"  lint {combo}", flush=True))
+    if args.exercise:
+        print("  exercise dense/qp/kernel (spec) for retrace counts",
+              flush=True)
+        report["retrace"] = _exercise_retrace()
+
+    n_viol = report["violations"] + len(
+        report.get("retrace", {}).get("violations", []))
+    for combo in report["combos"]:
+        for rec in combo["points"]:
+            for name, viols in rec["checks"].items():
+                for v in viols:
+                    print(f"VIOLATION {combo['family']}/{combo['form']}/"
+                          f"{combo['mode']} {rec['point']}: {v['check']}: "
+                          f"{v['message']}"
+                          + (f" [at: {v['eqn']}]" if v.get("eqn") else ""))
+    for v in report.get("retrace", {}).get("violations", []):
+        print(f"VIOLATION retrace: {v['message']}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+        print(f"report -> {args.out}")
+    print(f"{report['checks']} checks across "
+          f"{len(report['combos'])} combos: {n_viol} violation(s)")
+    return 1 if (args.check and n_viol) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

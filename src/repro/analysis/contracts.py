@@ -1,0 +1,288 @@
+"""The contract-point registry and the family x form x mode sweep.
+
+A "contract point" is one jitted serving graph the engine runs — decode
+tick, bucketed prefill admission, speculative tick, multi-slot admit, and
+the module-level ``generate`` loop. Engines describe their own points
+abstractly (``ServingEngine.contract_points``), this module builds reduced
+configs for every family, captures each point's jaxpr by abstract eval
+only (``jax.make_jaxpr`` over engine state + ShapeDtypeStructs — nothing
+executes), and runs the passes that apply:
+
+  kernel mode      no_dequant (clean + lowered to pallas_call),
+                   no_quadratic_scores (full-attention prefill + verify),
+                   vmem_budget, no_host_callback, carry_dtype, donation
+  fallback mode    the SAME dequant/score detectors must TRIP (the
+                   fallback graphs are the reference signal — if they stop
+                   tripping, the kernel-mode checks are vacuous), plus
+                   no_host_callback / carry_dtype / donation, which hold
+                   in every mode.
+
+The quadratic-score pass applies to full-attention prefill only
+(dense/moe): the SSD chunked scan (ssm, hybrid's mamba groups) builds an
+intra-chunk (c, c) masked matmul BY DESIGN — quadratic in the chunk
+length, linear overall — so a (T, T) tensor in its prefill is not a
+violation. Verify (spec_tick) is checked for every attention-bearing
+family: T = spec_k+1 there, far below the SSD chunk size.
+
+``retrace_report`` folds the engine's jit trace counts into the same
+report shape, so retrace budgets live next to the graph contracts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import passes
+from repro.analysis.vmem import DEFAULT_VMEM_BUDGET, pallas_vmem_estimate
+from repro.analysis.jaxpr_utils import find_pallas_eqns
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.precision import W3A8
+from repro.core.treeutil import flatten_with_path, role_of
+
+__all__ = ["FAMILIES", "FORMS", "MODES", "ARCH_FOR", "DEFAULT_VMEM_BUDGET",
+           "forbidden_dequant_shapes", "lint_combo", "run_sweep",
+           "retrace_report"]
+
+# weight-only 3-bit: the serve policy every registry graph is linted under
+W3 = dataclasses.replace(W3A8, act_bits=None)
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid")
+FORMS = ("q", "qp")
+MODES = ("kernel", "fallback")
+
+ARCH_FOR = {"dense": "qwen2-1.5b", "moe": "phi3.5-moe-42b-a6.6b",
+            "ssm": "mamba2-2.7b", "hybrid": "zamba2-1.2b"}
+
+# registry engine geometry: tiny but exercising every path. max_len (48)
+# is deliberately distinct from the reduced vocab (64) and d_model (32) so
+# the (T, S) score predicate can't collide with logits or residuals.
+SLOTS, MAX_LEN, SPEC_K = 2, 48, 2
+
+
+def forbidden_dequant_shapes(float_params, policy=W3) -> set:
+    """Shapes a dequantized weight matrix would have in a serve graph:
+    each quantizable leaf's full (stacked) shape and its per-layer slice.
+    (Shared by the no_dequant pass here and tests/test_kernel_dispatch.)"""
+    shapes = set()
+    for path, leaf in flatten_with_path(float_params).items():
+        if not (path.endswith("/w") or path == "w"):
+            continue
+        if policy.spec_for(role_of(path)) is None:
+            continue
+        nd = quant_dense._stacked_dims(path)
+        shapes.add(tuple(leaf.shape))
+        shapes.add(tuple(leaf.shape[nd:]))
+    return shapes
+
+
+@functools.lru_cache(maxsize=None)
+def _family_setup(family: str):
+    from repro.models import get_model
+    layers = 4 if family == "hybrid" else 2
+    cfg = reduced(get_config(ARCH_FOR[family]), layers=layers, d_model=32,
+                  vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@functools.lru_cache(maxsize=None)
+def _serve_setup(family: str, form: str):
+    cfg, params = _family_setup(family)
+    export = (quant_dense.export_levels if form == "q"
+              else quant_dense.export_container)
+    return cfg, export(params, W3), params
+
+
+def _mode_kwargs(mode: str) -> Dict[str, str]:
+    return (dict(matmul_mode="kernel", attn_mode="kernel") if mode == "kernel"
+            else dict(matmul_mode="dequant", attn_mode="ref"))
+
+
+def _engine(family: str, form: str, mode: str, *, spec: bool):
+    from repro.serving.engine import ServingEngine
+    cfg, sp, _ = _serve_setup(family, form)
+    return ServingEngine(sp, cfg, policy=W3, slots=SLOTS, max_len=MAX_LEN,
+                         dtype=jnp.float32, attn_chunk=MAX_LEN,
+                         spec_k=SPEC_K if spec else 0, **_mode_kwargs(mode))
+
+
+def _generate_point(cfg, serve_params, mode: str) -> Dict[str, Any]:
+    """The module-level ``generate`` loop as a contract point: prefill +
+    jitted scan over decode_step, captured over an abstract prompt."""
+    from repro.serving.engine import generate
+    prompts = jax.ShapeDtypeStruct((1, 4), jnp.int32)
+    kw = dict(policy=W3, max_new_tokens=4, dtype=jnp.float32,
+              **_mode_kwargs(mode))
+    return dict(name="generate_loop",
+                fn=lambda pr: generate(serve_params, pr, cfg, **kw),
+                args=(prompts,), donate=(), carry={}, score_dims=None)
+
+
+def _scores_apply(family: str, point: str) -> bool:
+    if point == "prefill_bucketed":
+        return family in ("dense", "moe")     # full-attention prefill only
+    if point == "spec_tick":
+        return family != "ssm"
+    return False
+
+
+def _verify_point(family: str, form: str, mode: str) -> Optional[Dict]:
+    """Model-level multi-token verify over an abstract live cache — the
+    contract point threaded through ``models/api.py``: the cache comes
+    from ``api.init_cache_abstract`` (zero allocation), the graph from
+    ``api.verify_step``."""
+    from repro.models import api as model_api
+    from repro.models import get_model
+    if family == "ssm":
+        return None
+    cfg, sp, _ = _serve_setup(family, form)
+    mod = get_model(cfg)
+    t = SPEC_K + 1
+    s = (mod.cache_len_for(cfg, MAX_LEN)
+         if hasattr(mod, "cache_len_for") else MAX_LEN)
+    cache = model_api.init_cache_abstract(cfg, SLOTS, MAX_LEN, jnp.float32,
+                                          per_slot_len=True)
+    toks = jax.ShapeDtypeStruct((SLOTS, t), jnp.int32)
+    mkw = _mode_kwargs(mode)
+
+    def fn(c, tk):
+        return model_api.verify_step(sp, c, tk, cfg, policy=W3,
+                                     dtype=jnp.float32, **mkw)
+    return dict(name="verify", fn=fn, args=(cache, toks), donate=(),
+                carry={}, score_dims=(t, s))
+
+
+def _point_checks(point: Dict[str, Any], jaxpr, *, mode: str, family: str,
+                  forbidden: set, vmem_budget: int) -> Dict[str, List]:
+    """Which passes gate this point in this mode -> their violations."""
+    name = point["name"]
+    kernel = mode == "kernel"
+    checks: Dict[str, List[passes.Violation]] = {
+        "no_host_callback": passes.check_no_host_callback(jaxpr),
+        "scan_carries": passes.check_scan_carries(jaxpr),
+    }
+    if kernel:
+        # admit_many is a pure multi-slot scatter — no matmul, hence no
+        # pallas_call to demand; it must still not materialize weights
+        checks["no_dequant"] = passes.check_no_dequant(
+            jaxpr, forbidden, require_pallas=name != "admit_many")
+        checks["vmem_budget"] = passes.check_vmem_budget(jaxpr, vmem_budget)
+        if point["score_dims"] and _scores_apply(family, name):
+            t, s = point["score_dims"]
+            checks["no_quadratic_scores"] = passes.check_no_quadratic_scores(
+                jaxpr, t, s, require_pallas=True)
+    else:
+        # detector sanity: the fallback graphs ARE the reference signal —
+        # the dequant path casts levels to (K, N) floats and the ref
+        # attention builds (.., T, S) chunk tiles, so the same detectors
+        # must trip here or the kernel-mode checks are vacuous
+        if name in ("decode_tick", "spec_tick", "prefill_bucketed",
+                    "generate_loop", "verify"):
+            hit = passes.check_no_dequant(jaxpr, forbidden,
+                                          require_pallas=False)
+            checks["no_dequant_signal"] = [] if hit else [passes.Violation(
+                "no_dequant_signal",
+                f"{name}: the dequant-fallback graph no longer trips the "
+                f"dequant detector — the kernel-mode no_dequant check is "
+                f"vacuous")]
+        if point["score_dims"] and _scores_apply(family, name):
+            t, s = point["score_dims"]
+            hit = passes.check_no_quadratic_scores(jaxpr, t, s)
+            checks["no_quadratic_scores_signal"] = [] if hit else [
+                passes.Violation(
+                    "no_quadratic_scores_signal",
+                    f"{name}: the ref-attention graph no longer trips the "
+                    f"(T={t}, S={s}) score detector — the kernel-mode "
+                    f"check is vacuous")]
+    if point["carry"]:
+        checks["carry_dtype"] = passes.check_carry_fixed_point(
+            point["fn"], point["args"], point["carry"], point=name)
+    if point["donate"]:
+        checks["donation"] = passes.check_donation(
+            point["fn"], point["args"], point["donate"], point=name)
+    return checks
+
+
+def lint_combo(family: str, form: str, mode: str, *,
+               vmem_budget: int = DEFAULT_VMEM_BUDGET) -> List[Dict]:
+    """Lint every contract point of one family x serve-form x mode combo.
+
+    Returns one record per point: ``{"point", "checks": {pass: [violation
+    dicts]}, "kernels": [vmem estimates]}`` — empty violation lists mean
+    the contract holds.
+    """
+    cfg, sp, float_params = _serve_setup(family, form)
+    forbidden = forbidden_dequant_shapes(float_params, W3)
+    points = _engine(family, form, mode, spec=False).contract_points()
+    if family != "ssm":
+        points += [p for p in
+                   _engine(family, form, mode, spec=True).contract_points()
+                   if p["name"] == "spec_tick"]
+        vp = _verify_point(family, form, mode)
+        if vp:
+            points.append(vp)
+    points.append(_generate_point(cfg, sp, mode))
+    out = []
+    for p in points:
+        jaxpr = jax.make_jaxpr(p["fn"])(*p["args"])
+        checks = _point_checks(p, jaxpr, mode=mode, family=family,
+                               forbidden=forbidden, vmem_budget=vmem_budget)
+        rec = {"point": p["name"],
+               "checks": {k: [v.to_dict() for v in vs]
+                          for k, vs in checks.items()}}
+        if mode == "kernel":
+            rec["kernels"] = [
+                {k: est[k] for k in
+                 ("name", "grid", "vmem_bytes", "smem_bytes")}
+                for est in map(pallas_vmem_estimate,
+                               find_pallas_eqns(jaxpr))]
+        out.append(rec)
+    return out
+
+
+def run_sweep(families: Sequence[str] = FAMILIES,
+              forms: Sequence[str] = FORMS,
+              modes: Sequence[str] = MODES, *,
+              vmem_budget: int = DEFAULT_VMEM_BUDGET,
+              progress=None) -> Dict[str, Any]:
+    """The full contract sweep -> the JSON report the CI gate uploads."""
+    combos, n_checks, n_viol = [], 0, 0
+    for family in families:
+        for form in forms:
+            for mode in modes:
+                if progress:
+                    progress(f"{family}/{form}/{mode}")
+                recs = lint_combo(family, form, mode,
+                                  vmem_budget=vmem_budget)
+                nv = sum(len(v) for r in recs for v in r["checks"].values())
+                n_checks += sum(len(r["checks"]) for r in recs)
+                n_viol += nv
+                combos.append({"family": family, "form": form, "mode": mode,
+                               "violations": nv, "points": recs})
+    return {"vmem_budget": vmem_budget, "checks": n_checks,
+            "violations": n_viol, "combos": combos}
+
+
+def retrace_report(engine, budgets: Optional[Dict[str, int]] = None
+                   ) -> Dict[str, Any]:
+    """Trace-count report from the engine's jit registry, in the same
+    shape as the contract checks: ``{"counts", "budgets", "violations"}``.
+    A healthy engine compiles its tick ONCE per run; the bucketed prefill
+    O(#admission buckets) times. Pass ``budgets`` as {jit name: max
+    traces} — names from ``ServingEngine.trace_counts()``."""
+    counts = engine.trace_counts()
+    budgets = dict(budgets or {})
+    viols = []
+    for name, limit in sorted(budgets.items()):
+        n = counts.get(name, 0)
+        if n > limit:
+            viols.append(passes.Violation(
+                "retrace_budget",
+                f"jit '{name}' compiled {n} traces, budget {limit} — "
+                f"an input aval is drifting between calls").to_dict())
+    return {"counts": counts, "budgets": budgets, "violations": viols}

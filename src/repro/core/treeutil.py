@@ -1,7 +1,7 @@
 """Small pytree helpers used across the framework (pure-dict param trees)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Any, Callable, Iterator, Optional
+from typing import Any, Callable, Iterator
 
 import jax
 

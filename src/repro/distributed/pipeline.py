@@ -18,13 +18,12 @@ the composable PP option for depth-dominated models — enable by adding a
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["pipeline_apply"]
 

@@ -14,7 +14,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.qmatmul.kernel import qmatmul_pallas
-from repro.kernels.qmatmul.ref import qmatmul_ref
 
 __all__ = ["qmatmul", "qdense", "on_tpu"]
 

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.qmatvec.kernel import qmatvec_pallas
-from repro.kernels.qmatvec.ref import qmatvec_ref
 
 __all__ = ["qmatvec"]
 

@@ -21,7 +21,7 @@ import traceback
 import jax
 
 from repro.configs import ARCH_IDS, LM_SHAPES, get_config, shape_by_name
-from repro.launch import hlo_analysis
+from repro.analysis import hlo as hlo_analysis
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell, input_specs  # noqa: F401 (public API)
 

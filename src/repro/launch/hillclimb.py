@@ -18,7 +18,7 @@ import jax
 
 from benchmarks import roofline as rl
 from repro.configs import TrainConfig, get_config, shape_by_name
-from repro.launch import hlo_analysis
+from repro.analysis import hlo as hlo_analysis
 from repro.launch.dryrun import aux_overrides
 from repro.launch.mesh import make_production_mesh
 from repro.launch.steps import build_cell

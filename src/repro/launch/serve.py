@@ -15,7 +15,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduced
 from repro.core import quant_dense

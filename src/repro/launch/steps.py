@@ -15,7 +15,6 @@ before/after comparisons.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -214,7 +213,6 @@ def _default_microbatches(cfg, shape, mesh) -> int:
 
 def _build_prefill(cfg, shape, mesh, quant, attn_chunk) -> CellSpec:
     policy = _policy(quant)
-    kind = "prefill" if quant != "float" else "float"
     params_t = _params_template(cfg, quant, "prefill")
     batch_t = input_specs(cfg, shape)
     pspecs = shd.param_specs(cfg, params_t, mesh)

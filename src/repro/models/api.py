@@ -79,9 +79,10 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.models import hybrid, mamba2, transformer
 
-__all__ = ["get_model", "init_cache", "prefill", "decode_step",
-           "verify_step", "rollback_cache", "spec_state_snapshot",
-           "draft_of", "insert_prefill", "insert_prefill_many"]
+__all__ = ["get_model", "init_cache", "init_cache_abstract", "prefill",
+           "decode_step", "verify_step", "rollback_cache",
+           "spec_state_snapshot", "draft_of", "insert_prefill",
+           "insert_prefill_many"]
 
 _FAMILY_MODULE = {
     "dense": transformer, "audio": transformer, "vlm": transformer,
@@ -120,6 +121,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None, *,
     if per_slot_len:
         cache["len"] = jnp.zeros((batch,), jnp.int32)
     return cache
+
+
+def init_cache_abstract(cfg: ModelConfig, batch: int, max_len: int,
+                        dtype=None, *, per_slot_len: bool = False,
+                        kv_bits: Optional[int] = None):
+    """The ShapeDtypeStruct tree of ``init_cache`` without allocating any
+    device memory — what the static-analysis contract registry
+    (``repro.analysis.contracts``) feeds abstract eval. Same validation,
+    same structure, zero bytes."""
+    import functools
+
+    return jax.eval_shape(functools.partial(
+        init_cache, cfg, batch, max_len, dtype,
+        per_slot_len=per_slot_len, kv_bits=kv_bits))
 
 
 def prefill(params, batch, cfg: ModelConfig, **kw):

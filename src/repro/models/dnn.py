@@ -9,7 +9,7 @@ oracle used here).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ LM head role 'output' (8-bit, the paper's sensitive-layer rule).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -9,7 +9,7 @@ updates, state = opt.update(grads, state, params, lr)`` — updates are
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

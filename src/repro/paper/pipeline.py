@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro import optim as optim_lib
 from repro.core import qat, quant_dense
-from repro.core.precision import FLOAT, W3A8, QuantPolicy
+from repro.core.precision import FLOAT, QuantPolicy
 from repro.data.synthetic import ClassificationTask, digit_task, phoneme_task
 from repro.models import dnn
 from repro.training.losses import accuracy, softmax_xent
@@ -190,7 +190,6 @@ def _packed_forward(packed, x, rc: PaperRunConfig):
 
 
 def _packed_bytes(packed) -> int:
-    import numpy as np
     total = 0
     for leaf in jax.tree_util.tree_leaves(packed):
         total += leaf.size * leaf.dtype.itemsize

@@ -9,7 +9,6 @@ probabilities. CD-1 updates: dW = <v h>_data - <v' h'>_recon.
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp

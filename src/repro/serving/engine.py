@@ -423,6 +423,16 @@ class ServingEngine:
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(1,))
         self._admit_many_fn = jax.jit(self._admit_many, donate_argnums=(0,))
         self._prefill_fn = jax.jit(self._prefill)
+        # the analysis registry's window into this engine: raw jitted fns
+        # (recorded BEFORE any profile wrapping), so trace/retrace budgets
+        # can be reported from the same place the contract passes run —
+        # repro.analysis.contracts.retrace_report reads trace_counts()
+        self._jits = {"tick": self._tick_fn, "prefill": self._prefill_fn,
+                      "admit": self._admit_fn, "admit_many": self._admit_many_fn}
+        if self._spec:
+            self._jits.update(prefill_draft=self._prefill_draft_fn,
+                              admit_draft=self._admit_draft_fn,
+                              admit_draft_many=self._admit_draft_many_fn)
         # optional phase timers: wall-clock split between admission (prefill)
         # and decode ticks, for benchmarks. Wrapping blocks on each call's
         # result, so it trades a little async overlap for attribution —
@@ -460,6 +470,72 @@ class ServingEngine:
                     getattr(self, attr) + time.perf_counter() - t0)
             return out
         return wrapped
+
+    # --- static-analysis surface (repro.analysis.contracts) -----------------
+
+    def trace_counts(self) -> Dict[str, int]:
+        """{jit name: compiled-trace count} for every jitted serving graph.
+
+        The retrace-budget surface: a healthy engine compiles the tick
+        ONCE for an entire run and the bucketed prefill O(#buckets) times.
+        ``repro.analysis.contracts.retrace_report`` turns this into the
+        same JSON the contract passes report in."""
+        return {name: int(fn._cache_size())
+                for name, fn in self._jits.items()}
+
+    def contract_points(self, bucket: Optional[int] = None
+                        ) -> List[Dict[str, Any]]:
+        """The engine's jitted serving graphs, described abstractly for the
+        static-analysis passes — NOTHING here executes a graph.
+
+        Each point: ``name``; the unjitted ``fn``; example ``args``
+        (engine state plus ShapeDtypeStructs where no live array exists);
+        ``donate`` (the argnums the engine donates, for the donation
+        pass); ``carry`` (input argnum -> output index for every buffer
+        that must be an aval fixed point across ticks — the carry-dtype
+        pass); and ``score_dims`` ((T, S) a quadratic score tensor would
+        trail with, or None where the pass doesn't apply).
+
+        ``bucket`` is the admission bucket length to describe prefill at
+        (default: the largest, i.e. the cache-capped bucket)."""
+        bucket = bucket or self._bucket_cap
+        key = jax.random.PRNGKey(0)
+        sds = jax.ShapeDtypeStruct
+        toks = sds((self.slots, bucket), jnp.int32)
+        lens = sds((self.slots,), jnp.int32)
+        ivec = sds((self.slots,), jnp.int32)
+        # abstract batched-prefill outputs feed the admission point
+        logits0, src = jax.eval_shape(self._prefill, self.params, toks, lens)
+        points: List[Dict[str, Any]] = []
+        if self._spec:
+            points.append(dict(
+                name="spec_tick", fn=self._spec_tick,
+                args=(self.params, self.draft_params, self.cache,
+                      self.draft_cache, self._tokens, self._active,
+                      self._emitted, self._budget, key),
+                donate=(2, 3),
+                carry={2: 0, 3: 1, 4: 2, 5: 3, 6: 4},
+                score_dims=(self.spec_k + 1, self._bucket_cap)))
+        else:
+            points.append(dict(
+                name="decode_tick", fn=self._tick,
+                args=(self.params, self.cache, self._tokens, self._active,
+                      self._emitted, self._budget, key),
+                donate=(1,),
+                carry={1: 0, 2: 1, 3: 2, 4: 3},
+                score_dims=None))
+        points.append(dict(
+            name="prefill_bucketed", fn=self._prefill,
+            args=(self.params, toks, lens), donate=(), carry={},
+            score_dims=(bucket, bucket)))
+        points.append(dict(
+            name="admit_many", fn=self._admit_many,
+            args=(self.cache, self._tokens, self._active, self._emitted,
+                  self._budget, ivec, src, logits0, ivec, key),
+            donate=(0,),
+            carry={0: 0, 1: 1, 2: 2, 3: 3, 4: 4},
+            score_dims=None))
+        return points
 
     # --- jitted graph builders (self.mod looked up at trace time so tests can
     # --- instrument the family module's decode_step) ------------------------

@@ -1,8 +1,12 @@
-"""HLO collective parser + roofline reconstruction math."""
+"""HLO collective parser + roofline reconstruction math.
+
+The parser lives in ``repro.analysis.hlo`` (the static-analysis
+subsystem's compiled-artifact backend); ``repro.launch.hlo_analysis``
+stays importable as a compat shim — both are exercised here."""
 import numpy as np
 
 from benchmarks import roofline as rl
-from repro.launch.hlo_analysis import collective_bytes, _shape_bytes
+from repro.analysis.hlo import collective_bytes, _shape_bytes
 
 HLO = """
 HloModule test
@@ -28,6 +32,25 @@ def test_shape_bytes():
     assert _shape_bytes("bf16[64]") == 128
     assert _shape_bytes("s8[10,10]") == 100
     assert _shape_bytes("pred[8]") == 8
+
+
+def test_shape_bytes_packed_dtypes():
+    """The packed serve forms put sub-byte and 8-bit codes on the wire:
+    s4/u4 are bit-packed two per byte, every f8 variant is one byte."""
+    assert _shape_bytes("s4[128,256]") == 128 * 256 // 2
+    assert _shape_bytes("u4[16]") == 8
+    assert _shape_bytes("u8[100]") == 100
+    assert _shape_bytes("f8e4m3fn[32,32]") == 32 * 32
+    assert _shape_bytes("f8e5m2[64]") == 64
+
+
+def test_hlo_analysis_compat_shim():
+    """repro.launch.hlo_analysis re-exports the moved implementation."""
+    from repro.analysis import hlo
+    from repro.launch import hlo_analysis
+    assert hlo_analysis.collective_bytes is hlo.collective_bytes
+    assert hlo_analysis._shape_bytes is hlo._shape_bytes
+    assert hlo_analysis.DTYPE_BYTES is hlo.DTYPE_BYTES
 
 
 def test_collective_parser_counts_operands():

@@ -1,0 +1,237 @@
+"""True positives for every repro.analysis contract pass: each check must
+DEMONSTRABLY fire on a deliberately-broken graph with an actionable message
+naming the offense — plus a registry/sweep smoke test and the retrace-budget
+report. The carry-dtype test reintroduces the PR 5 ``mamba2.block_decode``
+bf16 conv-state drift via monkeypatch and proves the pass flags it."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import (Violation, check_carry_fixed_point,
+                            check_donation, check_no_dequant,
+                            check_no_host_callback,
+                            check_no_quadratic_scores, check_vmem_budget,
+                            forbidden_dequant_shapes, lint_combo,
+                            retrace_report)
+from repro.analysis.contracts import W3
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.packing import pack_matrix
+from repro.core.precision import FLOAT
+from repro.models import get_model, mamba2
+from repro.serving.engine import ServingEngine
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --- pass 1: no_dequant ------------------------------------------------------------
+
+def _serve_leaf(k=48, n=40):
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    q = jax.random.randint(ks[0], (k, n), -3, 4, jnp.int8)
+    d = jnp.abs(jax.random.normal(ks[1], (n,))) * 0.1 + 0.01
+    return {"qp": pack_matrix(q, 3), "delta": d.reshape(1, n)}
+
+
+def test_no_dequant_fires_on_dequant_matmul():
+    leaf = _serve_leaf()
+    x = SDS((8, 48), jnp.float32)
+    bad = jax.make_jaxpr(
+        lambda xx: quant_dense.serve_apply(leaf, xx, mode="dequant"))(x)
+    viols = check_no_dequant(bad, {(48, 40)}, require_pallas=False)
+    assert viols, "dequant matmul must trip the pass"
+    v = viols[0]
+    assert v.check == "no_dequant" and "(48, 40)" in v.message
+    assert v.eqn, "violation must name the offending eqn"
+    # and the kernel path is clean (incl. the pallas_call requirement)
+    good = jax.make_jaxpr(
+        lambda xx: quant_dense.serve_apply(leaf, xx, mode="kernel",
+                                           interpret=True))(x)
+    assert not check_no_dequant(good, {(48, 40)}, require_pallas=True)
+
+
+def test_no_dequant_fires_on_missing_pallas():
+    """Kernel mode that silently fell back (no pallas_call anywhere) is
+    itself a violation under require_pallas."""
+    jx = jax.make_jaxpr(lambda a: a @ a)(SDS((8, 8), jnp.float32))
+    viols = check_no_dequant(jx, set(), require_pallas=True)
+    assert len(viols) == 1 and "no pallas_call" in viols[0].message
+
+
+# --- pass 2: no_quadratic_scores ---------------------------------------------------
+
+def test_no_quadratic_scores_fires_on_einsum_prefill():
+    t = s = 48
+
+    def einsum_attn(q, k, v):
+        scores = jnp.einsum("btd,bsd->bts", q, k) * (q.shape[-1] ** -0.5)
+        return jnp.einsum("bts,bsd->btd", jax.nn.softmax(scores), v)
+
+    args = [SDS((2, t, 16), jnp.float32)] * 3
+    viols = check_no_quadratic_scores(jax.make_jaxpr(einsum_attn)(*args),
+                                      t, s)
+    assert viols and all(v.check == "no_quadratic_scores" for v in viols)
+    assert any(f"(T={t}, S={s})" in v.message for v in viols)
+    assert any("dot_general" in v.eqn or "softmax" in v.eqn
+               or "exp" in v.eqn for v in viols)
+    # min_rank filters coarse-point shape collisions
+    assert not check_no_quadratic_scores(jax.make_jaxpr(einsum_attn)(*args),
+                                         t, s, min_rank=4)
+
+
+# --- pass 3: no_host_callback ------------------------------------------------------
+
+def test_no_host_callback_fires_on_debug_callback():
+    def tick(c):
+        jax.debug.print("tok {}", c.sum())
+        return c + 1
+
+    viols = check_no_host_callback(jax.make_jaxpr(tick)(SDS((4,),
+                                                          jnp.float32)))
+    assert viols and "debug_callback" in viols[0].message
+    assert "sync" in viols[0].message
+    assert not check_no_host_callback(
+        jax.make_jaxpr(lambda c: c + 1)(SDS((4,), jnp.float32)))
+
+
+# --- pass 4: carry_dtype (the PR 5 bug class) --------------------------------------
+
+def test_carry_fixed_point_fires_on_dtype_drift():
+    def tick(cache, tok):
+        new = {"kv": cache["kv"].astype(jnp.bfloat16) + 1}   # the drift
+        return new, tok
+
+    cache = {"kv": SDS((2, 16), jnp.float32)}
+    viols = check_carry_fixed_point(tick, (cache, SDS((2,), jnp.int32)),
+                                    {0: 0}, point="tick")
+    assert len(viols) == 1
+    v = viols[0]
+    assert v.check == "carry_dtype"
+    assert "'kv'" in v.message and "float32" in v.message \
+        and "bfloat16" in v.message and "retrace" in v.message
+
+
+def test_carry_pass_flags_reintroduced_block_decode_drift(monkeypatch):
+    """Reintroduce the PR 5 bug: ``mamba2.block_decode`` returning the conv
+    tail in the activation dtype instead of the carried state's canonical
+    dtype. The carry-dtype pass must flag the engine tick statically."""
+    cfg = reduced(get_config("mamba2-2.7b"), layers=2, d_model=32, vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(params, cfg, policy=FLOAT, slots=2, max_len=32,
+                        dtype=jnp.float32)
+    point = next(p for p in eng.contract_points()
+                 if p["name"] == "decode_tick")
+    assert not check_carry_fixed_point(point["fn"], point["args"],
+                                       point["carry"], point="decode_tick")
+
+    real = mamba2.block_decode
+
+    def drifting(lp, h_in, state, cfg, **kw):
+        h, st = real(lp, h_in, state, cfg, **kw)
+        return h, dict(st, conv=st["conv"].astype(jnp.bfloat16))
+
+    monkeypatch.setattr(mamba2, "block_decode", drifting)
+    viols = check_carry_fixed_point(point["fn"], point["args"],
+                                    point["carry"], point="decode_tick")
+    assert viols, "the reintroduced bf16 conv drift must be flagged"
+    assert any("conv" in v.message and "bfloat16" in v.message
+               for v in viols)
+
+
+# --- pass 5: donation --------------------------------------------------------------
+
+def test_donation_fires_when_dtype_drift_defeats_aliasing():
+    def bad(c):
+        return {"buf": c["buf"].astype(jnp.bfloat16)}
+
+    viols = check_donation(bad, ({"buf": SDS((128,), jnp.float32)},), (0,),
+                           point="tick")
+    assert viols and all(v.check == "donation" for v in viols)
+    assert any("copy" in v.message for v in viols)
+
+    def good(c):
+        return {"buf": c["buf"] + 1}
+
+    assert not check_donation(good, ({"buf": SDS((128,), jnp.float32)},),
+                              (0,), point="tick")
+
+
+# --- pass 6: vmem_budget -----------------------------------------------------------
+
+def test_vmem_budget_fires_on_oversized_blockspec():
+    from jax.experimental import pallas as pl
+
+    def copy_kernel(x_ref, o_ref):
+        o_ref[:] = x_ref[:]
+
+    n = 2048                        # (2048, 2048) f32 = 16 MiB per ref
+    big = jax.make_jaxpr(lambda x: pl.pallas_call(
+        copy_kernel, out_shape=SDS((n, n), jnp.float32))(x))(
+            SDS((n, n), jnp.float32))
+    viols = check_vmem_budget(big)  # default budget: one core's ~16 MiB
+    assert len(viols) == 1
+    v = viols[0]
+    assert v.check == "vmem_budget" and "copy_kernel" in v.message
+    assert "exceeds budget" in v.message and "2048" in v.message
+    # the same kernel fits a loose budget
+    assert not check_vmem_budget(big, budget_bytes=256 * 1024 * 1024)
+
+
+def test_vmem_estimates_real_kernel():
+    """The estimator reads a real serve kernel's footprint off its traced
+    eqn: nonzero, and under the default budget for the reduced config."""
+    from repro.analysis.jaxpr_utils import find_pallas_eqns
+    from repro.analysis.vmem import pallas_vmem_estimate
+
+    leaf = _serve_leaf()
+    jx = jax.make_jaxpr(lambda x: quant_dense.serve_apply(
+        leaf, x, mode="kernel", interpret=True))(SDS((8, 48), jnp.float32))
+    eqns = find_pallas_eqns(jx)
+    assert eqns
+    est = pallas_vmem_estimate(eqns[0])
+    assert est["vmem_bytes"] > 0 and est["grid"]
+    assert not check_vmem_budget(jx)
+
+
+# --- registry sweep + retrace budgets ----------------------------------------------
+
+def test_lint_combo_clean_on_dense_q_kernel():
+    """One full registry combo holds every contract (the CI gate sweeps
+    all 16; this is the in-suite smoke)."""
+    recs = lint_combo("dense", "q", "kernel")
+    bad = {(r["point"], c): v for r in recs
+           for c, v in r["checks"].items() if v}
+    assert not bad, bad
+    names = {r["point"] for r in recs}
+    assert {"decode_tick", "prefill_bucketed", "admit_many", "spec_tick",
+            "verify", "generate_loop"} <= names
+    # kernel mode attaches per-kernel VMEM estimates to the report
+    assert any(r.get("kernels") for r in recs)
+
+
+def test_forbidden_shapes_cover_stacked_and_sliced():
+    cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=32, vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    shapes = forbidden_dequant_shapes(params, W3)
+    assert shapes
+    assert any(len(sh) == 2 for sh in shapes)        # per-layer (K, N)
+    assert any(len(sh) == 3 for sh in shapes)        # stacked (L, K, N)
+
+
+def test_retrace_report_budgets():
+    class FakeEngine:
+        def trace_counts(self):
+            return {"tick": 3, "prefill": 1}
+
+    rep = retrace_report(FakeEngine(), budgets={"tick": 1, "prefill": 2})
+    assert rep["counts"] == {"tick": 3, "prefill": 1}
+    assert len(rep["violations"]) == 1
+    assert "tick" in rep["violations"][0]["message"]
+    assert "3 traces" in rep["violations"][0]["message"]
+
+
+def test_violation_str_carries_eqn():
+    v = Violation("no_dequant", "msg", eqn="dot_general -> f32[4, 4]")
+    assert "no_dequant: msg [at: dot_general -> f32[4, 4]]" == str(v)
+    assert dataclasses.asdict(v) == v.to_dict()

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import check_no_quadratic_scores
 from repro.configs import get_config, reduced
 from repro.core.precision import FLOAT, W3A8
 from repro.kernels.attn_prefill.ops import attn_prefill
@@ -191,45 +192,9 @@ def test_chunked_attention_empty_row_guard():
 
 
 # --- the tentpole invariant: no (T, S) score tensor in kernel-mode graphs ---------
-
-def _float_shapes_outside_pallas(jaxpr):
-    """All float-dtype result shapes in the graph, NOT descending into
-    pallas_call bodies (their VMEM tiles are the point of the kernel).
-    Returns (float_shapes, saw_pallas)."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def subjaxprs(val):
-        if isinstance(val, ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, Jaxpr):
-            yield val
-        elif isinstance(val, (tuple, list)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    shapes, saw = set(), [False]
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                saw[0] = True
-                continue
-            for v in eqn.outvars:
-                aval = v.aval
-                if (hasattr(aval, "dtype")
-                        and jnp.issubdtype(aval.dtype, jnp.floating)):
-                    shapes.add(tuple(aval.shape))
-            for val in eqn.params.values():
-                for sub in subjaxprs(val):
-                    walk(sub)
-
-    walk(jaxpr.jaxpr if isinstance(jaxpr, ClosedJaxpr) else jaxpr)
-    return shapes, saw[0]
-
-
-def _score_shapes(shapes, t, s):
-    return {sh for sh in shapes if len(sh) >= 2 and sh[-2:] == (t, s)}
-
+# (the jaxpr walking lives in repro.analysis now — the shared pass keeps
+# this test's exact strictness: any float tensor with trailing (T, S) dims
+# outside pallas_call, rank >= 2, or a missing pallas_call, is a violation)
 
 def _graph_cfg():
     cfg = reduced(get_config("qwen2-1.5b"), layers=2, d_model=32, vocab=64)
@@ -251,14 +216,13 @@ def test_prefill_graph_has_no_quadratic_score_tensor():
             lengths=lens, max_len=64, attn_mode=mode)
         return jax.make_jaxpr(fn)(toks)
 
-    shapes_k, saw = _float_shapes_outside_pallas(run("kernel"))
-    hit = _score_shapes(shapes_k, t, t)
-    assert saw, "kernel mode must lower to pallas_call"
-    assert not hit, f"(T, T) score tensors {hit} in kernel-mode prefill graph"
+    viols = check_no_quadratic_scores(run("kernel"), t, t,
+                                      require_pallas=True)
+    assert not viols, "; ".join(str(v) for v in viols)
     # detector sanity: the ref chunked path DOES build (B, KV, G, T, chunk)
     # tiles with chunk == T here, so the same check must trip on it
-    shapes_r, _ = _float_shapes_outside_pallas(run("ref"))
-    assert _score_shapes(shapes_r, t, t), "detector lost its ref signal"
+    assert check_no_quadratic_scores(run("ref"), t, t), \
+        "detector lost its ref signal"
 
 
 def test_verify_graph_has_no_score_tensor():
@@ -276,12 +240,11 @@ def test_verify_graph_has_no_score_tensor():
             attn_mode=mode)
         return jax.make_jaxpr(fn)(cache, toks)
 
-    shapes_k, saw = _float_shapes_outside_pallas(run("kernel"))
-    hit = _score_shapes(shapes_k, t, s)
-    assert saw, "kernel mode must lower to pallas_call"
-    assert not hit, f"(T, S) score tensors {hit} in kernel-mode verify graph"
-    shapes_r, _ = _float_shapes_outside_pallas(run("ref"))
-    assert _score_shapes(shapes_r, t, s), "detector lost its ref signal"
+    viols = check_no_quadratic_scores(run("kernel"), t, s,
+                                      require_pallas=True)
+    assert not viols, "; ".join(str(v) for v in viols)
+    assert check_no_quadratic_scores(run("ref"), t, s), \
+        "detector lost its ref signal"
 
 
 # --- engine-level token parity ----------------------------------------------------

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.core.precision import FLOAT, W3A8, QuantPolicy
+from repro.core.precision import FLOAT, W3A8
 from repro.models import get_model
 
 B, S, P = 2, 20, 16

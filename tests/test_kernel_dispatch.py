@@ -11,11 +11,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import check_no_dequant, forbidden_dequant_shapes
 from repro.configs import get_config, reduced
 from repro.core import quant_dense
 from repro.core.packing import pack_matrix
 from repro.core.precision import W3A8
-from repro.core.treeutil import flatten_with_path, role_of
 from repro.models import api as model_api
 from repro.models import get_model
 from repro.serving.engine import generate
@@ -112,62 +112,15 @@ def test_kernel_decode_tokens_match_dequant(family, form):
 
 
 # --- the tentpole invariant: no dequantized weight in the decode graph ------------
-
-def _forbidden_shapes(float_params, policy):
-    """Shapes a dequantized weight matrix would have in the decode graph:
-    each quantizable leaf's full (stacked) shape and its per-layer slice."""
-    shapes = set()
-    for path, leaf in flatten_with_path(float_params).items():
-        if not (path.endswith("/w") or path == "w"):
-            continue
-        if policy.spec_for(role_of(path)) is None:
-            continue
-        nd = quant_dense._stacked_dims(path)
-        shapes.add(tuple(leaf.shape))
-        shapes.add(tuple(leaf.shape[nd:]))
-    return shapes
-
-
-def _float_shapes_outside_pallas(jaxpr):
-    """All float-dtype result shapes in the graph, NOT descending into
-    pallas_call bodies (their VMEM tiles are the point of the kernel).
-    Returns (float_shapes, saw_pallas)."""
-    from jax.core import ClosedJaxpr, Jaxpr
-
-    def subjaxprs(val):
-        if isinstance(val, ClosedJaxpr):
-            yield val.jaxpr
-        elif isinstance(val, Jaxpr):
-            yield val
-        elif isinstance(val, (tuple, list)):
-            for v in val:
-                yield from subjaxprs(v)
-
-    shapes, saw = set(), [False]
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "pallas_call":
-                saw[0] = True
-                continue
-            for v in eqn.outvars:
-                aval = v.aval
-                if (hasattr(aval, "dtype")
-                        and jnp.issubdtype(aval.dtype, jnp.floating)):
-                    shapes.add(tuple(aval.shape))
-            for val in eqn.params.values():
-                for sub in subjaxprs(val):
-                    walk(sub)
-
-    walk(jaxpr.jaxpr if isinstance(jaxpr, ClosedJaxpr) else jaxpr)
-    return shapes, saw[0]
-
+# (the shape-forbidding and jaxpr-walking live in repro.analysis now — the
+# shared pass keeps this test's exact strictness: a forbidden-shape hit OR
+# a missing pallas_call is a violation)
 
 @pytest.mark.parametrize("form", ["q", "qp"])
 @pytest.mark.parametrize("family", ["dense", "moe", "ssm", "hybrid"])
 def test_kernel_mode_decode_graph_has_no_dequantized_weight(family, form):
     cfg, sp, float_params = _setup(family, form)
-    forbidden = _forbidden_shapes(float_params, W3)
+    forbidden = forbidden_dequant_shapes(float_params, W3)
     cache = model_api.init_cache(cfg, 2, 16, jnp.float32, per_slot_len=True)
     toks = jnp.zeros((2, 1), jnp.int32)
 
@@ -176,13 +129,12 @@ def test_kernel_mode_decode_graph_has_no_dequantized_weight(family, form):
             sp, c, t, cfg, policy=W3, dtype=jnp.float32, matmul_mode=mode)
         return jax.make_jaxpr(fn)(cache, toks)
 
-    shapes_k, saw_pallas = _float_shapes_outside_pallas(run("kernel"))
-    hit_k = shapes_k & forbidden
-    assert saw_pallas, "kernel mode must lower to pallas_call"
-    assert not hit_k, (f"{family}/{form}: dequantized weight shapes "
-                      f"{hit_k} materialized in kernel-mode decode graph")
+    viols = check_no_dequant(run("kernel"), forbidden, require_pallas=True)
+    assert not viols, (f"{family}/{form}: "
+                       + "; ".join(str(v) for v in viols))
     # detector sanity: the dequant fallback DOES build per-layer (K, N)
     # float operands (levels cast to the activation dtype), so the same
     # check must trip there — otherwise the assertion above is vacuous
-    shapes_d, _ = _float_shapes_outside_pallas(run("dequant"))
-    assert shapes_d & forbidden, "shape detector lost its reference signal"
+    assert check_no_dequant(run("dequant"), forbidden,
+                            require_pallas=False), \
+        "shape detector lost its reference signal"

@@ -1,5 +1,4 @@
 """The paper's 3-step pipeline (reduced size): end-to-end invariants."""
-import jax.numpy as jnp
 import pytest
 
 from repro.paper.pipeline import PaperRunConfig, run_paper_experiment

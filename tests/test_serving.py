@@ -47,7 +47,8 @@ def test_serving_engine_continuous_batching():
     cfg, params = _setup()
     eng = ServingEngine(params, cfg, policy=FLOAT, slots=2, max_len=32,
                         dtype=jnp.float32)
-    uids = [eng.submit([1, 2, 3], max_new=4) for _ in range(5)]
+    for _ in range(5):
+        eng.submit([1, 2, 3], max_new=4)
     done = eng.run_all()
     assert len(done) == 5
     assert all(len(r.out) == 4 for r in done)

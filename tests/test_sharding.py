@@ -1,12 +1,9 @@
 """Sharding rules: divisibility guards, spec validity on the production mesh
 shapes (pure spec-level checks — no 512-device init in the test process; the
 real lowering proof lives in the dry-run)."""
-import numpy as np
 import pytest
-import jax
-from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCH_IDS, LM_SHAPES, get_config, shape_by_name
+from repro.configs import ARCH_IDS, LM_SHAPES, get_config
 from repro.core.treeutil import flatten_with_path
 from repro.distributed import sharding as shd
 from repro.launch.steps import input_specs, _params_template, _state_template

@@ -5,7 +5,6 @@ checked empirically at temperature > 0, plus the deterministic greedy
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

@@ -166,7 +166,6 @@ def test_api_dispatch_and_ssm_rejection():
     assert model_api.spec_state_snapshot(cfg, cache) is None
 
     scfg, sparams = _setup("ssm")
-    smod = get_model(scfg)
     state = model_api.init_cache(scfg, 1, 16, jnp.float32)
     with pytest.raises(ValueError, match="ssm"):
         model_api.verify_step(sparams, state, toks[:, :2], scfg,

@@ -16,7 +16,7 @@ from repro.core.precision import FLOAT, W3A8
 from repro.data.pipeline import HostLoader, prefetch
 from repro.data.synthetic import lm_batch
 from repro.models import get_model
-from repro.training.loop import StragglerMonitor, Trainer, make_train_step
+from repro.training.loop import StragglerMonitor, make_train_step
 
 
 def _tiny():

@@ -76,12 +76,17 @@ MIXES = {
     # 1k-4k prompts (buckets 1024/2048/4096): admission time is dominated
     # by prefill attention, the regime the blocked kernel exists for
     "long": [1024, 2048, 1536, 4096],
+    # overload: same short prompts, but arrival-paced at ~2x the engine's
+    # slot-tick service capacity under bounded admission + mixed deadlines
+    # + preemption — measures shed/deadline-miss/latency, not amortization
+    "overload": [3, 8, 5, 12, 4, 16, 7, 9],
 }
 # per-mix defaults for the knobs whose sensible values depend on prompt
 # scale: (slots, requests, max_new, repeats, attn_chunk)
 MIX_DEFAULTS = {
     "mixed": ("1,4,8,16", 16, 24, 3, 1024),
     "long": ("1,2", 4, 8, 1, 256),
+    "overload": ("2,4", 24, 12, 1, 1024),
 }
 
 
@@ -166,6 +171,67 @@ def bench_form(params, cfg, policy, *, slots: int, requests: int,
         if best is None or r["tok_per_sec"] > best["tok_per_sec"]:
             best = r
     return best
+
+
+def bench_overload(params, cfg, policy, *, slots: int, requests: int,
+                   max_new: int, lengths, matmul_mode: str = "auto",
+                   attn_mode: str = "auto", kv_bits=None,
+                   attn_chunk: int = 1024, max_ticks: int = 4096) -> dict:
+    """Overload scenario: requests arrive in waves of ``2 * slots`` every 4
+    ticks — roughly 2x the slot-tick service rate, so the bounded queue
+    (``queue_limit = 2 * slots``, reject policy) must shed and the
+    fair-share preemption/deadline machinery is exercised, not idle.
+    Deadlines cycle none / loose (4 * max_new) / tight (max_new // 2), so a
+    fraction of requests CANNOT finish in time by construction. Reports
+    shed-rate, deadline-miss-rate, preemption count and submit->finish
+    latency percentiles; ``deadlocked`` records whether the watchdog fired
+    (the --check gate requires it never does)."""
+    from repro.serving.resilience import WatchdogExpired
+    eng = ServingEngine(params, cfg, policy=policy, slots=slots,
+                        max_len=max(lengths) + max_new + 1,
+                        dtype=jnp.float32, matmul_mode=matmul_mode,
+                        attn_mode=attn_mode, kv_bits=kv_bits,
+                        attn_chunk=attn_chunk,
+                        queue_limit=2 * slots, shed_policy="reject",
+                        preempt_after=max(2, max_new // 4),
+                        max_ticks=max_ticks)
+    prompts = _prompts(requests, lengths)
+    deadlines = [None, 4 * max_new, max(1, max_new // 2)]
+    outcomes, done = [], []
+    deadlocked = False
+    t0 = time.perf_counter()
+    wave = 2 * slots
+    for i in range(0, len(prompts), wave):
+        for j, p in enumerate(prompts[i:i + wave]):
+            outcomes.append(eng.submit(
+                p, max_new=max_new,
+                deadline_ticks=deadlines[(i + j) % len(deadlines)]))
+        for _ in range(4):                 # serve between arrival waves
+            eng.step()
+        done.extend(eng.drain())
+    try:
+        done.extend(eng.run_all())
+    except WatchdogExpired:
+        deadlocked = True
+        done.extend(eng.drain())
+    dt = time.perf_counter() - t0
+    accepted = sum(1 for o in outcomes if o.accepted)
+    lats = sorted(r.finish_time - r.submit_time for r in done
+                  if r.submit_time and r.finish_time)
+    pct = (lambda q: lats[min(len(lats) - 1, int(q * len(lats)))]) if lats \
+        else (lambda q: 0.0)
+    toks = sum(len(r.out) for r in done)
+    return {"slots": slots, "submitted": len(outcomes), "accepted": accepted,
+            "completed_ok": sum(1 for r in done if r.status == "ok"),
+            "shed_rate": eng.shed_count / max(len(outcomes), 1),
+            "deadline_miss_rate": eng.deadline_miss_count / max(accepted, 1),
+            "preemptions": eng.preempt_count,
+            "poisoned": eng.poisoned_count,
+            "queue_peak": eng.queue_peak,
+            "latency_p50_s": pct(0.50), "latency_p99_s": pct(0.99),
+            "tokens": toks, "secs": dt, "tok_per_sec": toks / dt,
+            "ticks": eng.decode_calls, "deadlocked": deadlocked,
+            "attn_mode": attn_mode, "kv_bits": kv_bits}
 
 
 def main():
@@ -258,6 +324,57 @@ def main():
           f"V={args.vocab}), {args.requests} {args.mix}-mix requests "
           f"(prompt lens {lengths}) x {args.max_new} tokens")
     kv_bits = 8 if args.kv8 else None
+
+    if args.mix == "overload":
+        print(f"{'form':>4} {'slots':>5} {'subm':>5} {'acc':>4} "
+              f"{'shed%':>6} {'dlmiss%':>7} {'preempt':>7} {'qpeak':>5} "
+              f"{'p50_s':>7} {'p99_s':>7} {'tok/s':>8} {'wedged':>6}")
+        for form in args.forms.split(","):
+            p, pol = form_params[form]
+            results[form] = []
+            for slots in slot_counts:
+                r = bench_overload(p, cfg, pol, slots=slots,
+                                   requests=args.requests,
+                                   max_new=args.max_new, lengths=lengths,
+                                   matmul_mode=args.matmul_mode,
+                                   attn_mode=args.attn_mode, kv_bits=kv_bits,
+                                   attn_chunk=args.attn_chunk)
+                results[form].append(r)
+                print(f"{form:>4} {r['slots']:>5} {r['submitted']:>5} "
+                      f"{r['accepted']:>4} {100 * r['shed_rate']:>6.1f} "
+                      f"{100 * r['deadline_miss_rate']:>7.1f} "
+                      f"{r['preemptions']:>7} {r['queue_peak']:>5} "
+                      f"{r['latency_p50_s']:>7.3f} {r['latency_p99_s']:>7.3f} "
+                      f"{r['tok_per_sec']:>8.1f} "
+                      f"{str(r['deadlocked']):>6}")
+        if args.out:
+            artifact = {
+                "bench": "serving", "arch": cfg.name,
+                "reduced": {"layers": args.layers, "d_model": args.d_model,
+                            "vocab": args.vocab},
+                "requests": args.requests, "max_new": args.max_new,
+                "mix": args.mix, "mix_lengths": lengths,
+                "matmul_mode": args.matmul_mode,
+                "attn_mode": args.attn_mode, "kv_bits": kv_bits,
+                "results": results,
+            }
+            with open(args.out, "w") as f:
+                json.dump(artifact, f, indent=2)
+            print(f"wrote {args.out}")
+        cells = [r for rs in results.values() for r in rs]
+        # overload gate: the engine must never deadlock (every run drains
+        # to completion under the watchdog) and bounded admission must not
+        # degenerate into shedding EVERYTHING (some work always completes)
+        ok = (bool(cells)
+              and all(not r["deadlocked"] for r in cells)
+              and all(r["shed_rate"] < 1.0 for r in cells)
+              and all(r["completed_ok"] > 0 for r in cells))
+        print(f"overload gate (no deadlock, shed-rate < 1.0, some requests "
+              f"complete) over {len(cells)} cells: {ok}")
+        if args.check and not ok:
+            raise SystemExit(1)
+        return
+
     print(f"{'form':>4} {'slots':>5} {'tokens':>7} {'ticks':>6} "
           f"{'prefills':>8} {'secs':>7} {'pfill_s':>7} {'dec_s':>7} "
           f"{'tok/s':>8} {'ptok/s':>8} {'acc/tick':>8} {'KB/slot':>8}")

@@ -8,6 +8,13 @@ Speculative serving (the 3-bit drafter proposes, the serving form verifies):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --quant float --spec-k 4 --requests 8 --slots 4 --max-new 16
+
+Overload-hardened serving (bounded admission + deadlines + preemption +
+watchdog; prints the resilience counters after the run):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --requests 16 --slots 2 --queue-limit 8 --shed-policy drop_oldest \
+        --deadline 48 --preempt 8 --max-ticks 512
 """
 from __future__ import annotations
 
@@ -59,6 +66,24 @@ def main():
     ap.add_argument("--draft-depth", type=float, default=1.0,
                     help="fraction of the layer stack the drafter keeps "
                          "(1.0 = full-depth self-draft)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bounded admission: queued requests past this "
+                         "depth are shed per --shed-policy")
+    ap.add_argument("--shed-policy", default="reject",
+                    choices=["reject", "drop_oldest"],
+                    help="what bounded admission sheds when the queue is "
+                         "full: the new request, or the oldest queued one")
+    ap.add_argument("--deadline", type=int, default=None,
+                    help="default per-request deadline in decode ticks; "
+                         "expired requests are cancelled mid-stream "
+                         "(partial output, status='deadline')")
+    ap.add_argument("--preempt", type=int, default=None,
+                    help="preempt a slot held this many ticks when the "
+                         "queue has waiters; the request requeues with its "
+                         "committed tokens (token-exact at T=0)")
+    ap.add_argument("--max-ticks", type=int, default=None,
+                    help="watchdog: abort run_all with a diagnostic dump "
+                         "after this many driver iterations")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -88,7 +113,12 @@ def main():
                         attn_mode=args.attn_mode,
                         kv_bits=8 if args.kv8 else None,
                         spec_k=args.spec_k, draft_params=draft_params,
-                        draft_cfg=draft_cfg)
+                        draft_cfg=draft_cfg,
+                        queue_limit=args.queue_limit,
+                        shed_policy=args.shed_policy,
+                        default_deadline=args.deadline,
+                        preempt_after=args.preempt,
+                        max_ticks=args.max_ticks)
     # mixed prompt lengths: exercises the length-bucketed batched admission
     lens = [4, 8, 5, 12, 3, 16, 7, 9]
     t0 = time.time()
@@ -108,6 +138,17 @@ def main():
           f"{eng.prefill_calls} bucketed prefill calls "
           f"({len(done) / max(eng.prefill_calls, 1):.2f} req/prefill)"
           f"{spec}")
+    if (args.queue_limit is not None or args.deadline is not None
+            or args.preempt is not None):
+        by_status: dict = {}
+        for r in done:
+            by_status[r.status] = by_status.get(r.status, 0) + 1
+        print(f"resilience: statuses {by_status}, "
+              f"shed {eng.shed_count}, "
+              f"deadline misses {eng.deadline_miss_count}, "
+              f"preemptions {eng.preempt_count}, "
+              f"poisoned {eng.poisoned_count}, "
+              f"queue peak {eng.queue_peak}")
 
 
 if __name__ == "__main__":

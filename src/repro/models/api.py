@@ -82,7 +82,7 @@ from repro.models import hybrid, mamba2, transformer
 __all__ = ["get_model", "init_cache", "init_cache_abstract", "prefill",
            "decode_step", "verify_step", "rollback_cache",
            "spec_state_snapshot", "draft_of", "insert_prefill",
-           "insert_prefill_many"]
+           "insert_prefill_many", "free_slots"]
 
 _FAMILY_MODULE = {
     "dense": transformer, "audio": transformer, "vlm": transformer,
@@ -204,6 +204,18 @@ def draft_of(cfg: ModelConfig, params, *, policy=None,
         draft_params = quant_dense.export_container(draft_params,
                                                     policy or W3A8)
     return draft_cfg, draft_params
+
+
+def free_slots(cfg: ModelConfig, cache, slots):
+    """Zero rows ``slots`` (N,) of a slot-major cache/state back to the
+    freshly-allocated state (``len`` 0, all entries 0) — the release
+    primitive behind slot preemption, deadline cancellation, and NaN
+    quarantine. Every family supports it (unlike ``rollback_cache``: a
+    full release needs no trajectory — zero IS the SSD initial state).
+    Out-of-range entries are dropped, matching ``insert_prefill_many``;
+    the committed-token snapshot a preemption requeues with is host-side
+    (``Request.prompt + Request.out``), so nothing is read back here."""
+    return get_model(cfg).free_slots(cache, slots)
 
 
 def insert_prefill(cfg: ModelConfig, cache, slot, src):

@@ -479,6 +479,24 @@ def rollback_cache(state, slots, new_lens, trajectory=None):
     return out
 
 
+def free_slots(state, slots):
+    """Zero rows ``slots`` (N,) of a slot-major hybrid state — KV entries
+    (+ int8 scales), mamba group/tail states, and ``len`` — back to the
+    freshly-allocated state: the preemption/deadline/quarantine release
+    primitive. Batch axes as in :func:`insert_prefill_many`; out-of-range
+    entries are dropped (padding convention)."""
+    out = dict(state)
+    out["groups"] = jax.tree_util.tree_map(
+        lambda x: x.at[:, :, slots].set(0, mode="drop"), state["groups"])
+    out["kv"] = jax.tree_util.tree_map(
+        lambda x: x.at[:, slots].set(0, mode="drop"), state["kv"])
+    if "tail" in state:
+        out["tail"] = jax.tree_util.tree_map(
+            lambda x: x.at[:, slots].set(0, mode="drop"), state["tail"])
+    out["len"] = state["len"].at[slots].set(0, mode="drop")
+    return out
+
+
 def insert_prefill(state, slot, src):
     """Copy a single-request prefill state (batch=1, same max_len) into row
     ``slot`` of a slot-major shared state whose ``len`` is per-slot (slots,).

@@ -459,6 +459,17 @@ def rollback_cache(state, slots, new_lens, trajectory=None):
     raise ValueError(_NO_SPEC)
 
 
+def free_slots(state, slots):
+    """Zero rows ``slots`` (N,) of a slot-major state (conv + SSM states)
+    and reset their ``len`` — the preemption/deadline/quarantine release
+    primitive. The SSD state is a running fold, so zeroing IS the fresh
+    state; out-of-range entries are dropped (padding convention)."""
+    layers = jax.tree_util.tree_map(
+        lambda x: x.at[:, slots].set(0, mode="drop"), state["layers"])
+    ln = state["len"].at[slots].set(0, mode="drop")
+    return {"layers": layers, "len": ln}
+
+
 def insert_prefill(state, slot, src):
     """Copy a single-request prefill state (batch=1) into row ``slot`` of a
     slot-major shared state whose ``len`` is per-slot (slots,). ``slot`` may

@@ -495,6 +495,22 @@ def rollback_cache(cache, slots, new_lens, trajectory=None):
     return out
 
 
+def free_slots(cache, slots):
+    """Zero rows ``slots`` (N,) of a slot-major cache and reset their
+    ``len`` to 0 — the release primitive behind preemption, deadline
+    cancellation and NaN quarantine. The freed rows are exactly the
+    freshly-allocated state (so a later ``insert_prefill_many`` admission
+    is indistinguishable from first use, and a quarantined row's
+    non-finite K/V entries cannot linger). Entries with ``slots[i] >=
+    batch`` are dropped (the engine's padding convention)."""
+    out = dict(cache)
+    names = ("k", "v") + (("k_scale", "v_scale") if "k_scale" in cache else ())
+    for name in names:                       # leaves (L, slots, ...): axis 1
+        out[name] = cache[name].at[:, slots].set(0, mode="drop")
+    out["len"] = cache["len"].at[slots].set(0, mode="drop")
+    return out
+
+
 def insert_prefill(cache, slot, src):
     """Copy a single-request prefill cache (batch=1, same max_len) into row
     ``slot`` of a slot-major shared cache whose ``len`` is per-slot (slots,).

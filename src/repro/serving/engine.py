@@ -67,6 +67,28 @@ rejects spec mode loudly — SSD state can't rewind), and for sliding-window
 archs the engine requires ``max_len <= window`` so speculation never
 wraps the KV ring (a wrapped rewind would lose overwritten entries).
 
+Overload hardening (``serving.resilience``): admission is BOUNDED —
+``queue_limit`` + ``shed_policy`` turn ``submit()`` into a structured
+accept/shed outcome with ``shed_count``/queue-depth counters instead of an
+unbounded queue; per-request DEADLINES (``submit(..., deadline_ticks=)`` /
+engine ``default_deadline``) cancel expired requests mid-stream on the
+host side (slot freed and zeroed, partial output returned with
+``Request.status == "deadline"``); slot PREEMPTION (``preempt_after``)
+snapshots a long-running slot's committed tokens when the queue has
+waiters, frees the slot, and requeues the request through the normal
+bucketed prefill path (token-parity-exact at T=0 — greedy continuation
+from prompt+committed is the unpreempted continuation); an on-device
+HEALTH CHECK folded into every jitted tick (one per-slot isfinite
+reduction riding the existing ``_pending`` drain — no extra sync)
+quarantines slots whose logits go non-finite (``status == "poisoned"``,
+row zeroed, ``poisoned_count``) instead of silently emitting garbage; a
+DEGRADATION LADDER retries a failed tick call on progressively simpler
+graphs (spec -> plain tick, kernel -> dequant/ref); and ``run_all(
+max_ticks=)`` is a WATCHDOG that raises a diagnostic dump instead of
+spinning forever. A deterministic ``resilience.FaultPlan`` (test-only
+``fault_plan=`` hook) injects NaN logits / tick failures / admission
+delays so every recovery path is exercised by tests and CI.
+
 Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows
 — a slot's tokens can depend on what else is in the batch. Dynamic
 activation scales (``policy.act_bits``) are per-ROW (each batch row gets
@@ -74,13 +96,19 @@ its own absmax), so decode ticks are row-independent; batched-prefill
 parity under act quant additionally requires the prompt to land exactly on
 its admission bucket (padding positions inside a row enter that row's
 absmax) — and speculative verify processes spec_k+1 positions per row, so
-spec parity likewise needs ``act_bits=None``. Dense/ssm/hybrid decode AND
+spec parity likewise needs ``act_bits=None``. Preemption parity inherits
+the same condition: the requeued request re-enters through batched prefill
+at an arbitrary (mid-stream) length, so with act quant its re-admission
+absmax differs from the original admission's and the continuation can
+drift; with weight-only quantization the preempted continuation is
+token-identical. Dense/ssm/hybrid decode AND
 batched prefill with weight-only quantization are row-independent and
 therefore token-identical to single-request ``generate``.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -91,8 +119,12 @@ from repro.configs.base import ModelConfig
 from repro.core.precision import QuantPolicy
 from repro.models import api as model_api
 from repro.models import get_model
+from repro.serving import resilience
+from repro.serving.resilience import (FaultPlan, SubmitOutcome,
+                                      SubmitRejected, WatchdogExpired)
 
-__all__ = ["generate", "Request", "ServingEngine"]
+__all__ = ["generate", "Request", "ServingEngine", "FaultPlan",
+           "SubmitOutcome", "SubmitRejected", "WatchdogExpired"]
 
 # smallest admission bucket: prompts of length 1..8 share one compilation
 _MIN_BUCKET = 8
@@ -275,7 +307,7 @@ def _spec_generate(params, prompts: jnp.ndarray, cfg: ModelConfig, *,
         cache, dcache, pending, emitted, buf, key = carry
         key, kt = jax.random.split(key)
         active = emitted < max_new_tokens
-        cache, dcache, a, out, pending = spec_decode_tick(
+        cache, dcache, a, out, pending, _ok = spec_decode_tick(
             mod, dmod, params, draft_params, cfg, draft_cfg, cache, dcache,
             pending, active, spec_k=spec_k, temperature=temperature, key=kt,
             mkw=mkw, dmkw=dmkw, attn_kw=attn_kw["decode"],
@@ -306,6 +338,29 @@ class Request:
     # draft-accept length distribution with it)
     ticks: int = 0
     accept_hist: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # resilience: terminal outcome (one of resilience.STATUS — "ok" unless
+    # the request was cancelled/shed/quarantined), absolute expiry in
+    # decode ticks (None = no deadline), times preempted, and host
+    # wall-clock stamps for submit->finish latency
+    status: str = "ok"
+    deadline_at: Optional[int] = None
+    preemptions: int = 0
+    submit_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def admit_prompt(self) -> List[int]:
+        """What admission prefills: the prompt plus every committed token.
+        For a fresh request this is the prompt; a preempted request
+        re-enters the bucketed prefill path with its progress folded in,
+        which at T=0 greedy makes the continuation token-identical to the
+        run it was evicted from."""
+        return self.prompt + self.out
+
+    @property
+    def remaining(self) -> int:
+        """Tokens still owed (the admission budget after preemption)."""
+        return self.max_new - len(self.out)
 
 
 class ServingEngine:
@@ -335,13 +390,28 @@ class ServingEngine:
                  attn_mode: str = "auto", kv_bits: Optional[int] = None,
                  spec_k: int = 0, draft_params=None,
                  draft_cfg: Optional[ModelConfig] = None,
-                 attn_chunk: int = 1024, profile: bool = False):
+                 attn_chunk: int = 1024, profile: bool = False,
+                 queue_limit: Optional[int] = None,
+                 shed_policy: str = "reject",
+                 default_deadline: Optional[int] = None,
+                 preempt_after: Optional[int] = None,
+                 max_ticks: Optional[int] = None, degrade: bool = True,
+                 fault_plan: Optional[FaultPlan] = None):
         from repro.core.quant_dense import MATMUL_MODES
         if matmul_mode not in MATMUL_MODES:
             raise ValueError(f"matmul_mode must be one of {MATMUL_MODES}, "
                              f"got {matmul_mode!r}")
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if shed_policy not in resilience.SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of "
+                             f"{resilience.SHED_POLICIES}, got {shed_policy!r}")
+        for name, val in (("queue_limit", queue_limit),
+                          ("default_deadline", default_deadline),
+                          ("preempt_after", preempt_after),
+                          ("max_ticks", max_ticks)):
+            if val is not None and val < 1:
+                raise ValueError(f"{name} must be >= 1 or None, got {val}")
         self.params, self.cfg, self.policy = params, cfg, policy
         self.deltas, self.dtype = deltas, dtype
         self.mod = get_model(cfg)
@@ -386,28 +456,64 @@ class ServingEngine:
         self._emitted = jnp.zeros((slots,), jnp.int32)     # tokens produced
         self._budget = jnp.zeros((slots,), jnp.int32)      # per-slot max_new
         self._key = jax.random.PRNGKey(seed)
+        # the healthy poison bias: ALWAYS a tick input, so fault injection
+        # (NaN entries) never changes the traced graph
+        self._poison0 = jnp.zeros((slots,), jnp.float32)
         # host-side bookkeeping
         self.queue: List[Request] = []
         self._slot_req: List[Optional[Request]] = [None] * slots
         self._ticks_left = [0] * slots        # deterministic lifetime bound
+        self._slot_ticks = [0] * slots        # ticks the current owner held
         # pending records: (tokens (slots, T), counts (slots,), done,
-        # owners, accepted-or-None, kind) — T=1 with counts as the emitted
-        # mask for admissions and plain ticks, T=spec_k+1 with true counts
-        # for speculative ticks
+        # owners, accepted-or-None, kind, bad-or-None) — T=1 with counts as
+        # the emitted mask for admissions and plain ticks, T=spec_k+1 with
+        # true counts for speculative ticks; ``bad`` is the tick's on-device
+        # per-slot health flag (None for admissions)
         self._pending: List[Tuple] = []
         self._finished: List[Request] = []    # synced but not yet returned
         self._uid = 0
         self.decode_calls = 0                 # ticks == decode_step calls
         self.prefill_calls = 0                # batched prefill invocations
+        # resilience knobs + counters
+        self.queue_limit = queue_limit
+        self.shed_policy = shed_policy
+        self.default_deadline = default_deadline
+        self.preempt_after = preempt_after
+        self.max_ticks = max_ticks
+        self.degrade = degrade
+        self._fault_plan = fault_plan
+        self._failed_ticks: set = set()       # one-shot fail_ticks consumed
+        self._was_spec = False                # degraded out of spec mode
+        self.shed_count = 0                   # requests refused/evicted
+        self.deadline_miss_count = 0          # requests expired past deadline
+        self.preempt_count = 0                # slot evictions (requeued)
+        self.poisoned_count = 0               # slots quarantined (non-finite)
+        self.fallback_events: List[Tuple[int, str]] = []  # (tick, ladder step)
+        self.queue_peak = 0                   # high-water queue depth
         # admission buckets are capped by the cache length: for sliding-
         # window archs the ring slice in prefill is only per-row-exact while
         # padded length <= window, so longer prompts take the solo path
         self._bucket_cap = (self.mod.cache_len_for(cfg, max_len)
                             if hasattr(self.mod, "cache_len_for") else max_len)
-        # donate the shared cache(s): without donation every tick and every
-        # admission materializes a full second copy of the slot-major cache.
-        # The small per-slot vectors are NOT donated — pending records hold
-        # references to pre-tick `active` arrays.
+        # optional phase timers: wall-clock split between admission (prefill)
+        # and decode ticks, for benchmarks. Wrapping blocks on each call's
+        # result, so it trades a little async overlap for attribution —
+        # off by default.
+        self.prefill_secs = 0.0
+        self.decode_secs = 0.0
+        self._profile = profile
+        self._build_jits()
+
+    def _build_jits(self):
+        """(Re)build every jitted serving graph from the CURRENT mode knobs
+        (spec on/off, matmul_mode, attn_mode). Called at construction and
+        again by each degradation-ladder step — the mode kwargs are baked
+        into the traced graphs, so changing them means re-jitting.
+
+        Donation: the shared cache(s) are donated (without donation every
+        tick and every admission materializes a full second copy of the
+        slot-major cache). The small per-slot vectors are NOT donated —
+        pending records hold references to pre-tick ``active`` arrays."""
         if self._spec:
             self._tick_fn = jax.jit(self._spec_tick, donate_argnums=(2, 3))
             self._prefill_draft_fn = jax.jit(self._prefill_draft)
@@ -418,28 +524,32 @@ class ServingEngine:
                 lambda dc, sm, src: self.dmod.insert_prefill_many(dc, sm,
                                                                   src),
                 donate_argnums=(0,))
+            self._free_draft_fn = jax.jit(
+                lambda dc, idx: model_api.free_slots(self.draft_cfg, dc, idx),
+                donate_argnums=(0,))
         else:
             self._tick_fn = jax.jit(self._tick, donate_argnums=(1,))
         self._admit_fn = jax.jit(self._admit_device, donate_argnums=(1,))
         self._admit_many_fn = jax.jit(self._admit_many, donate_argnums=(0,))
         self._prefill_fn = jax.jit(self._prefill)
+        # slot release (preemption / deadline cancel / quarantine): index
+        # vector is always padded to (slots,) with the OOB sentinel so it
+        # compiles once regardless of how many rows are freed
+        self._free_fn = jax.jit(
+            lambda c, idx: model_api.free_slots(self.cfg, c, idx),
+            donate_argnums=(0,))
         # the analysis registry's window into this engine: raw jitted fns
         # (recorded BEFORE any profile wrapping), so trace/retrace budgets
         # can be reported from the same place the contract passes run —
         # repro.analysis.contracts.retrace_report reads trace_counts()
         self._jits = {"tick": self._tick_fn, "prefill": self._prefill_fn,
-                      "admit": self._admit_fn, "admit_many": self._admit_many_fn}
+                      "admit": self._admit_fn, "admit_many": self._admit_many_fn,
+                      "free": self._free_fn}
         if self._spec:
             self._jits.update(prefill_draft=self._prefill_draft_fn,
                               admit_draft=self._admit_draft_fn,
                               admit_draft_many=self._admit_draft_many_fn)
-        # optional phase timers: wall-clock split between admission (prefill)
-        # and decode ticks, for benchmarks. Wrapping blocks on each call's
-        # result, so it trades a little async overlap for attribution —
-        # off by default.
-        self.prefill_secs = 0.0
-        self.decode_secs = 0.0
-        if profile:
+        if self._profile:
             self._tick_fn = self._timed(self._tick_fn, "decode_secs")
             self._prefill_fn = self._timed(self._prefill_fn, "prefill_secs")
             self._admit_fn = self._timed(self._admit_fn, "prefill_secs")
@@ -452,6 +562,36 @@ class ServingEngine:
                                                    "prefill_secs")
                 self._admit_draft_many_fn = self._timed(
                     self._admit_draft_many_fn, "prefill_secs")
+
+    # --- degradation ladder (called via resilience.degrade_step) ------------
+
+    def _disable_spec(self):
+        """Ladder step 1, spec -> plain: abandon the drafter and its cache
+        and re-jit the plain tick. The target stream is unaffected (spec is
+        exact — dropping it changes throughput, never tokens): the device
+        ``_tokens`` row is the last committed-but-unfed token in both
+        modes, so the plain tick resumes mid-request seamlessly. Host
+        ``_ticks_left`` stays an upper bound (spec emits >= 1 token per
+        tick), and ``_was_spec`` keeps ``_spin_up`` syncing so early
+        finishes discovered at drain still free slots promptly."""
+        self._spec = False
+        self._was_spec = True
+        self.spec_k = 0
+        self.draft_cache = None
+        self._build_jits()
+
+    def _fallback_modes(self):
+        """Ladder step 2, kernel -> fallback: route every quantized matmul
+        through the fused dequant path and every attention through the
+        ref path — the parity oracles the kernels are tested against —
+        then re-jit."""
+        self.matmul_mode = "dequant"
+        self.attn_mode = "ref"
+        self._attn_kw = _attn_kwargs(self.cfg, self.attn_mode, self.kv_bits)
+        if self._spec:
+            self._dattn_kw = _attn_kwargs(self.draft_cfg, self.attn_mode,
+                                          self.kv_bits)
+        self._build_jits()
 
     @property
     def spec_accept_rate(self) -> float:
@@ -512,7 +652,7 @@ class ServingEngine:
                 name="spec_tick", fn=self._spec_tick,
                 args=(self.params, self.draft_params, self.cache,
                       self.draft_cache, self._tokens, self._active,
-                      self._emitted, self._budget, key),
+                      self._emitted, self._budget, self._poison0, key),
                 donate=(2, 3),
                 carry={2: 0, 3: 1, 4: 2, 5: 3, 6: 4},
                 score_dims=(self.spec_k + 1, self._bucket_cap)))
@@ -520,7 +660,7 @@ class ServingEngine:
             points.append(dict(
                 name="decode_tick", fn=self._tick,
                 args=(self.params, self.cache, self._tokens, self._active,
-                      self._emitted, self._budget, key),
+                      self._emitted, self._budget, self._poison0, key),
                 donate=(1,),
                 carry={1: 0, 2: 1, 3: 2, 4: 3},
                 score_dims=None))
@@ -565,38 +705,55 @@ class ServingEngine:
                                  attn_chunk=self.attn_chunk,
                                  **self._dmkw(), **self._dattn_kw["prefill"])
 
-    def _tick(self, params, cache, tokens, active, emitted, budget, key):
-        """Advance every active slot one token. Masks computed on-device."""
+    def _tick(self, params, cache, tokens, active, emitted, budget, poison,
+              key):
+        """Advance every active slot one token. Masks computed on-device.
+
+        ``poison`` (slots,) f32 is added to the logits before the health
+        check — all-zeros in healthy operation (one add, graph identical),
+        NaN entries under fault injection. ``bad`` flags active rows whose
+        logits went non-finite: they are frozen exactly like inactive rows
+        (token and length held, nothing emitted) and deactivated, and the
+        flag rides the pending drain so the host can quarantine them — no
+        extra sync, no sampling from a corrupt distribution."""
         logits, new_cache = self.mod.decode_step(params, cache, tokens,
                                                  self.cfg, **self._mkw(),
                                                  **self._attn_kw["decode"])
+        logits = logits + poison[:, None, None]
+        bad = active & ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
+        ok = active & ~bad
         nxt = _sample(key, logits[:, 0], self.temperature).astype(jnp.int32)
-        nxt = jnp.where(active, nxt, tokens[:, 0])          # freeze inactive
-        emitted = emitted + active.astype(jnp.int32)
-        done = active & ((emitted >= budget) | (nxt == self._eos()))
-        new_cache["len"] = jnp.where(active, new_cache["len"], cache["len"])
-        return new_cache, nxt[:, None], active & ~done, emitted, done
+        nxt = jnp.where(ok, nxt, tokens[:, 0])       # freeze inactive + bad
+        emitted = emitted + ok.astype(jnp.int32)
+        done = ok & ((emitted >= budget) | (nxt == self._eos()))
+        new_cache["len"] = jnp.where(ok, new_cache["len"], cache["len"])
+        return new_cache, nxt[:, None], ok & ~done, emitted, done, bad
 
     def _spec_tick(self, params, dparams, cache, dcache, tokens, active,
-                   emitted, budget, key):
+                   emitted, budget, poison, key):
         """Advance every active slot by 1..spec_k+1 tokens: the shared
         ``spec_decode_tick`` core (draft chain -> one multi-token verify ->
         vectorized acceptance -> per-slot rollback of both caches) plus the
         engine's budget/EOS window truncation, all in this ONE jitted call.
         Inactive slots are frozen in-graph: their verify scratch-writes are
         fully rewound and their token/length held, exactly like the plain
-        tick's masking."""
+        tick's masking. ``poison``/``bad`` mirror the plain tick's health
+        check — the core treats a non-finite row as frozen (full rewind,
+        nothing committed), so a poisoned slot emits nothing and both
+        caches stay clean."""
         from repro.serving.spec import emit_counts, spec_decode_tick
-        cache, dcache, a, out, new_tok = spec_decode_tick(
+        cache, dcache, a, out, new_tok, row_ok = spec_decode_tick(
             self.mod, self.dmod, params, dparams, self.cfg, self.draft_cfg,
             cache, dcache, tokens, active, spec_k=self.spec_k,
             temperature=self.temperature, key=key, mkw=self._mkw(),
             dmkw=self._dmkw(), attn_kw=self._attn_kw["decode"],
-            dattn_kw=self._dattn_kw["decode"])
-        n, done = emit_counts(out, a, active=active, emitted=emitted,
+            dattn_kw=self._dattn_kw["decode"], logit_bias=poison)
+        bad = active & ~row_ok
+        eff = active & ~bad
+        n, done = emit_counts(out, a, active=eff, emitted=emitted,
                               budget=budget, eos_id=self._eos())
-        return (cache, dcache, new_tok, active & ~done, emitted + n, done,
-                out, n, jnp.where(active, a, 0))
+        return (cache, dcache, new_tok, eff & ~done, emitted + n, done,
+                out, n, jnp.where(eff, a, 0), bad)
 
     def _admit_device(self, params, cache, tokens, active, emitted, budget,
                       slot, src, logits0, req_budget, key):
@@ -634,13 +791,27 @@ class ServingEngine:
 
     # --- public API ---------------------------------------------------------
 
-    def submit(self, prompt: List[int], max_new: int = 16) -> int:
+    def submit(self, prompt: List[int], max_new: int = 16,
+               deadline_ticks: Optional[int] = None) -> SubmitOutcome:
+        """Enqueue a request. Malformed requests raise ``SubmitRejected``
+        (a ValueError with a machine-readable ``reason``); well-formed
+        requests return a ``SubmitOutcome`` — the uid as an int (legacy
+        callers unchanged) when admitted, falsy with
+        ``reason='queue_full'`` when bounded admission sheds it.
+
+        ``deadline_ticks`` (or the engine's ``default_deadline``) sets an
+        absolute expiry ``decode_calls + deadline_ticks``: a request not
+        finished by then is cancelled — mid-stream if resident (slot freed,
+        partial output returned with ``status='deadline'``), or straight
+        from the queue if it never got a slot."""
         if len(prompt) == 0:
             # a [] prompt would build a (1, 0) token array and crash deep
             # inside prefill; reject it where the caller can see why
-            raise ValueError("prompt must contain at least one token")
+            raise SubmitRejected("empty_prompt",
+                                 "prompt must contain at least one token")
         if max_new < 1:
-            raise ValueError(f"max_new must be >= 1, got {max_new}")
+            raise SubmitRejected("bad_max_new",
+                                 f"max_new must be >= 1, got {max_new}")
         if len(prompt) + max_new + self.spec_k > self.max_len:
             # speculative verify scratch-writes up to spec_k positions past
             # the final committed token; reserve that headroom in the cache
@@ -648,10 +819,34 @@ class ServingEngine:
             label = (f"prompt+max_new+spec_k ({len(prompt)}+{max_new}"
                      f"+{self.spec_k}={total})" if self._spec
                      else f"prompt+max_new ({total})")
-            raise ValueError(f"{label} exceeds engine max_len {self.max_len}")
+            raise SubmitRejected(
+                "too_long",
+                f"{label} exceeds engine max_len {self.max_len}")
+        if deadline_ticks is not None and deadline_ticks < 1:
+            raise SubmitRejected(
+                "bad_deadline",
+                f"deadline_ticks must be >= 1, got {deadline_ticks}")
+        shed: Tuple[int, ...] = ()
+        if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
+            self.shed_count += 1
+            if self.shed_policy == "reject":
+                return SubmitOutcome(0, accepted=False, reason="queue_full")
+            victim = self.queue.pop(0)               # drop_oldest
+            self._finish(victim, "shed")
+            shed = (victim.uid,)
         self._uid += 1
-        self.queue.append(Request(self._uid, list(prompt), max_new))
-        return self._uid
+        dl = deadline_ticks if deadline_ticks is not None \
+            else self.default_deadline
+        req = Request(self._uid, list(prompt), max_new,
+                      deadline_at=(self.decode_calls + dl) if dl else None,
+                      submit_time=time.perf_counter())
+        self.queue.append(req)
+        self.queue_peak = max(self.queue_peak, len(self.queue))
+        return SubmitOutcome(self._uid, accepted=True, shed=shed)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
 
     def _bucket_len(self, plen: int) -> int:
         """Admission bucket: next power of two >= plen (floor _MIN_BUCKET),
@@ -669,36 +864,179 @@ class ServingEngine:
     def _spin_up(self):
         """Admit queued requests into free slots, one length bucket at a
         time: every same-bucket queued request enters through ONE jitted
-        batched prefill + ONE jitted multi-slot admit."""
+        batched prefill + ONE jitted multi-slot admit. When the queue has
+        waiters and no slot is free, ``preempt_after`` lets a slot held
+        longer than its fair-share tick budget be preempted (committed
+        tokens snapshotted host-side, row freed, request requeued at the
+        back — it re-enters right here through the same bucketed path).
+
+        Admission keys on ``admit_prompt`` (prompt + committed tokens), so
+        preempted requests bucket by their grown effective prompt."""
+        if (self._fault_plan is not None
+                and self._fault_plan.delays_admission_at(self.decode_calls)):
+            return                            # injected admission stall
         if not self.queue:
             return
         free = self._free_slots()
-        if not free and (self.eos_id is not None or self._spec):
+        if not free and (self.eos_id is not None or self._spec
+                         or self._was_spec):
             # an EOS — or, with speculation, a multi-token burst through the
             # budget — may have freed a slot we haven't observed yet; _sync
             # keeps the finished requests queued for the next drain()
             self._sync()
             free = self._free_slots()
+        if not free and self.preempt_after is not None:
+            victims = [s for s in range(self.slots)
+                       if self._slot_req[s] is not None
+                       and self._slot_ticks[s] >= self.preempt_after]
+            if victims:
+                # never preempt more slots than there are waiters
+                self._preempt(victims[:len(self.queue)])
+                free = self._free_slots()
         while self.queue and free:
             head = self.queue[0]
-            if len(head.prompt) > self._bucket_cap:
+            if len(head.admit_prompt) > self._bucket_cap:
                 # sliding-window ring overflow: padded per-row ring alignment
                 # is undefined, so this prompt takes the exact solo path
                 self._admit_solo(free.pop(0), self.queue.pop(0))
                 continue
-            bucket = self._bucket_len(len(head.prompt))
+            bucket = self._bucket_len(len(head.admit_prompt))
             batch: List[Request] = []
             rest: List[Request] = []
             for r in self.queue:
                 if (len(batch) < len(free)
-                        and len(r.prompt) <= self._bucket_cap
-                        and self._bucket_len(len(r.prompt)) == bucket):
+                        and len(r.admit_prompt) <= self._bucket_cap
+                        and self._bucket_len(len(r.admit_prompt)) == bucket):
                     batch.append(r)
                 else:
                     rest.append(r)
             self.queue = rest
             slot_ids = [free.pop(0) for _ in batch]
             self._admit_batch(slot_ids, batch, bucket)
+
+    # --- slot release + resilience helpers ----------------------------------
+
+    def _finish(self, req: Request, status: str):
+        """Terminal bookkeeping shared by every way a request ends."""
+        req.status = status
+        req.done = True
+        req.finish_time = time.perf_counter()
+        self._finished.append(req)
+
+    def _pad_slots(self, slot_list: List[int]) -> jnp.ndarray:
+        """Slot indices padded to a fixed (slots,) shape with the OOB
+        sentinel (dropped by every scatter) — varying release counts never
+        retrace."""
+        idx = np.full((self.slots,), self.slots, np.int32)
+        idx[:len(slot_list)] = slot_list
+        return jnp.asarray(idx)
+
+    def _deactivate(self, slot_list: List[int]):
+        self._active = self._active.at[self._pad_slots(slot_list)].set(
+            False, mode="drop")
+
+    def _free_rows(self, slot_list: List[int]):
+        """Zero the cache rows of released slots (and the drafter's) back
+        to the freshly-allocated state — stale KV/SSM state (or NaN
+        contamination) never leaks into the slot's next tenant."""
+        idx = self._pad_slots(slot_list)
+        self.cache = self._free_fn(self.cache, idx)
+        if self._spec:
+            self.draft_cache = self._free_draft_fn(self.draft_cache, idx)
+
+    def _release_slot(self, s: int):
+        self._slot_req[s] = None
+        self._ticks_left[s] = 0
+        self._slot_ticks[s] = 0
+
+    def _preempt(self, victims: List[int]):
+        """Preempt ``victims``: sync so every committed token is
+        attributed, snapshot prompt+out host-side, requeue at the BACK of
+        the queue (waiters at the front get the freed slots), and zero the
+        device rows. The request re-enters through the normal bucketed
+        prefill with its committed tokens folded into the prompt — at T=0
+        greedy the continuation is token-identical to the run it left."""
+        self._sync()
+        live: List[int] = []
+        for s in victims:
+            req = self._slot_req[s]
+            if req is None or req.done:       # sync finished it already
+                continue
+            live.append(s)
+            req.preemptions += 1
+            self.preempt_count += 1
+            self._release_slot(s)
+            self.queue.append(req)
+        if live:
+            self._deactivate(live)
+            self._free_rows(live)
+
+    def _expire_deadlines(self):
+        """Cancel every request past its deadline: queued requests are
+        dropped before ever holding a slot; resident requests are synced
+        first (their partial output is attributed and returned), then
+        cancelled mid-stream — device row deactivated and zeroed."""
+        now = self.decode_calls
+        q_exp = [r for r in self.queue
+                 if r.deadline_at is not None and now >= r.deadline_at]
+        s_exp = [s for s in range(self.slots)
+                 if (r := self._slot_req[s]) is not None
+                 and r.deadline_at is not None and now >= r.deadline_at]
+        if not q_exp and not s_exp:
+            return
+        self._sync()          # attribute partial output before cancelling
+        for r in q_exp:
+            self.queue.remove(r)
+            self.deadline_miss_count += 1
+            self._finish(r, "deadline")
+        cancelled: List[int] = []
+        for s in s_exp:
+            r = self._slot_req[s]
+            if r is None or r.done:           # sync finished/freed it
+                continue
+            cancelled.append(s)
+            self.deadline_miss_count += 1
+            self._finish(r, "deadline")
+            self._release_slot(s)
+        if cancelled:
+            self._deactivate(cancelled)
+            self._free_rows(cancelled)
+
+    def _poison_for_tick(self) -> jnp.ndarray:
+        """The tick's logit-bias vector: the cached all-zeros array in
+        healthy operation (same buffer every tick — no retrace, one add in
+        the graph), NaN entries for slots the fault plan poisons now."""
+        fp = self._fault_plan
+        if fp is not None:
+            bad = [s for s in fp.nan_slots_at(self.decode_calls)
+                   if s < self.slots]
+            if bad:
+                v = np.zeros((self.slots,), np.float32)
+                v[bad] = np.nan
+                return jnp.asarray(v)
+        return self._poison0
+
+    def _diagnostics(self) -> Dict[str, Any]:
+        """The watchdog's dump: what is queued, who holds which slot and
+        for how much longer, and every resilience counter."""
+        return {
+            "queue_depth": len(self.queue),
+            "queued_uids": [r.uid for r in self.queue],
+            "active_slots": [s for s in range(self.slots)
+                             if self._slot_req[s] is not None],
+            "slots": [{"slot": s, "uid": r.uid,
+                       "ticks_left": self._ticks_left[s],
+                       "held_ticks": self._slot_ticks[s]}
+                      for s in range(self.slots)
+                      if (r := self._slot_req[s]) is not None],
+            "decode_calls": self.decode_calls,
+            "prefill_calls": self.prefill_calls,
+            "shed_count": self.shed_count,
+            "deadline_miss_count": self.deadline_miss_count,
+            "preempt_count": self.preempt_count,
+            "poisoned_count": self.poisoned_count,
+            "fallback_events": list(self.fallback_events),
+        }
 
     def _admit_batch(self, slot_ids: List[int], reqs: List[Request],
                      bucket: int):
@@ -714,8 +1052,9 @@ class ServingEngine:
         slot_map = np.full((n,), self.slots, np.int32)   # OOB -> dropped
         budgets = np.ones((n,), np.int32)
         for i, (s, r) in enumerate(zip(slot_ids, reqs)):
-            toks[i, :len(r.prompt)] = r.prompt
-            lens[i], slot_map[i], budgets[i] = len(r.prompt), s, r.max_new
+            ap = r.admit_prompt
+            toks[i, :len(ap)] = ap
+            lens[i], slot_map[i], budgets[i] = len(ap), s, r.remaining
         logits0, src = self._prefill_fn(self.params, jnp.asarray(toks),
                                         jnp.asarray(lens))
         self.prefill_calls += 1
@@ -739,7 +1078,7 @@ class ServingEngine:
     def _admit_solo(self, slot: int, req: Request):
         """Exact-length single-request admission (prompts longer than the
         bucket cap, i.e. past the sliding-window ring)."""
-        toks = jnp.asarray([req.prompt], jnp.int32)
+        toks = jnp.asarray([req.admit_prompt], jnp.int32)
         logits0, src = self._prefill_fn(self.params, toks)
         self.prefill_calls += 1
         self._key, k = jax.random.split(self._key)
@@ -747,7 +1086,7 @@ class ServingEngine:
          self._budget) = self._admit_fn(
             self.params, self.cache, self._tokens, self._active,
             self._emitted, self._budget, jnp.asarray(slot, jnp.int32),
-            src, logits0, jnp.asarray(req.max_new, jnp.int32), k)
+            src, logits0, jnp.asarray(req.remaining, jnp.int32), k)
         if self._spec:
             _, dsrc = self._prefill_draft_fn(self.draft_params, toks)
             self.draft_cache = self._admit_draft_fn(
@@ -763,47 +1102,93 @@ class ServingEngine:
         mask_np = np.zeros((self.slots,), bool)
         for s, r in zip(slot_ids, reqs):
             self._slot_req[s] = r
-            self._ticks_left[s] = r.max_new - 1
+            self._ticks_left[s] = r.remaining - 1
+            self._slot_ticks[s] = 0
             mask_np[s] = True
         mask = jnp.asarray(mask_np)
         self._pending.append((self._tokens, mask, mask & ~self._active,
-                              tuple(self._slot_req), None, "admit"))
+                              tuple(self._slot_req), None, "admit", None))
         for s in slot_ids:
             if self._ticks_left[s] <= 0:
                 self._slot_req[s] = None
 
     def step(self):
-        """Admit, then advance ALL active slots with ONE jitted decode call
-        (speculative mode: up to spec_k+1 tokens per slot, still one call).
+        """Expire deadlines, admit, then advance ALL active slots with ONE
+        jitted decode call (speculative mode: up to spec_k+1 tokens per
+        slot, still one call). A failed tick call is retried down the
+        degradation ladder (spec -> plain, kernel -> fallback) before the
+        failure propagates.
 
         Asynchronous: emitted tokens stay on device until ``drain()``.
         """
+        self._expire_deadlines()
         self._spin_up()
         if not self._occupied():
             return
         emitted_mask = self._active                  # who emits this tick
         owners = tuple(self._slot_req)
+        poison = self._poison_for_tick()
         self._key, k = jax.random.split(self._key)
-        if self._spec:
-            (self.cache, self.draft_cache, self._tokens, self._active,
-             self._emitted, done, out_toks, counts, accepted) = self._tick_fn(
-                self.params, self.draft_params, self.cache, self.draft_cache,
-                self._tokens, self._active, self._emitted, self._budget, k)
-            self._pending.append((out_toks, counts, done, owners, accepted,
-                                  "tick"))
-        else:
-            (self.cache, self._tokens, self._active, self._emitted,
-             done) = self._tick_fn(self.params, self.cache, self._tokens,
-                                   self._active, self._emitted, self._budget,
-                                   k)
-            self._pending.append((self._tokens, emitted_mask, done, owners,
-                                  None, "tick"))
+        self._dispatch_tick(owners, emitted_mask, poison, k)
         self.decode_calls += 1
         for s in range(self.slots):
             if self._slot_req[s] is not None:
+                self._slot_ticks[s] += 1
                 self._ticks_left[s] -= 1
                 if self._ticks_left[s] <= 0:
-                    self._slot_req[s] = None     # budget exhausted this tick
+                    self._release_slot(s)        # budget exhausted this tick
+
+    def _call_tick(self, poison, k):
+        """One jitted tick on the CURRENT graph (spec or plain), with the
+        fault plan's injected failures raised IN PLACE of the call — before
+        it, so donated buffers are intact and a ladder retry sees
+        consistent state. Each planned failure fires once."""
+        fp = self._fault_plan
+        if (fp is not None and fp.fails_at(self.decode_calls)
+                and self.decode_calls not in self._failed_ticks):
+            self._failed_ticks.add(self.decode_calls)
+            raise resilience.InjectedFault(
+                f"injected tick failure at decode tick {self.decode_calls}")
+        if self._spec:
+            return self._tick_fn(
+                self.params, self.draft_params, self.cache, self.draft_cache,
+                self._tokens, self._active, self._emitted, self._budget,
+                poison, k)
+        return self._tick_fn(self.params, self.cache, self._tokens,
+                             self._active, self._emitted, self._budget,
+                             poison, k)
+
+    def _dispatch_tick(self, owners, emitted_mask, poison, k):
+        """Run one tick, walking the degradation ladder on failure: each
+        retry first applies ``resilience.degrade_step`` (spec -> plain,
+        then kernel -> fallback graphs); with the ladder exhausted, an
+        injected (transient) fault still earns one same-graph retry, and
+        anything else propagates."""
+        attempts = 0
+        while True:
+            spec_call = self._spec
+            try:
+                out = self._call_tick(poison, k)
+                break
+            except Exception as e:
+                attempts += 1
+                label = resilience.degrade_step(self) if self.degrade else None
+                if (label is None and attempts < 3
+                        and isinstance(e, resilience.InjectedFault)):
+                    label = "retry"
+                if label is None or attempts >= 4:
+                    raise
+                self.fallback_events.append((self.decode_calls, label))
+        if spec_call:
+            (self.cache, self.draft_cache, self._tokens, self._active,
+             self._emitted, done, out_toks, counts, accepted, bad) = out
+            self._pending.append((out_toks, counts, done, owners, accepted,
+                                  "tick", bad))
+        else:
+            (self.cache, self._tokens, self._active, self._emitted,
+             done, bad) = out
+            self._pending.append((self._tokens, emitted_mask, done, owners,
+                                  None, "tick", bad))
 
     def _sync(self):
         """Bulk-sync everything emitted since the last sync; attribute
@@ -819,12 +1204,17 @@ class ServingEngine:
         if not self._pending:
             return
         moved = jax.device_get([(toks, counts, done,
-                                 () if acc is None else acc)
-                                for toks, counts, done, _, acc, _
+                                 () if acc is None else acc,
+                                 () if bad is None else bad)
+                                for toks, counts, done, _, acc, _, bad
                                 in self._pending])
-        for (toks, counts, done, acc), (_, _, _, owners, _, kind) in zip(
-                moved, self._pending):
+        quarantined: List[int] = []
+        for (toks, counts, done, acc, bad), (_, _, _, owners, _, kind, _) \
+                in zip(moved, self._pending):
+            badv = None if isinstance(bad, tuple) else np.asarray(bad)
             for s in np.nonzero(counts)[0]:
+                if badv is not None and badv[s]:
+                    continue       # poisoned row: frozen in-graph, no tokens
                 req = owners[s]
                 if req is not None:
                     n = int(counts[s])
@@ -834,17 +1224,30 @@ class ServingEngine:
                         req.accept_hist[n] = req.accept_hist.get(n, 0) + 1
             if not isinstance(acc, tuple):            # speculative tick
                 live = np.asarray(counts) > 0
-                self.spec_drafted += int(self.spec_k * live.sum())
+                # k from the record's window width: still right for records
+                # drained after a mid-run spec->plain degrade
+                self.spec_drafted += int((toks.shape[1] - 1) * live.sum())
                 self.spec_accepted += int(np.asarray(acc)[live].sum())
             for s in np.nonzero(done)[0]:
                 req = owners[s]
                 if req is not None and not req.done:
-                    req.done = True
-                    self._finished.append(req)
+                    self._finish(req, "ok")
                     if self._slot_req[s] is req:   # early EOS: free the slot
-                        self._slot_req[s] = None
-                        self._ticks_left[s] = 0
+                        self._release_slot(s)
+            if badv is not None:
+                for s in np.nonzero(badv)[0]:
+                    req = owners[s]
+                    if req is not None and not req.done:
+                        self.poisoned_count += 1
+                        self._finish(req, "poisoned")
+                        if self._slot_req[s] is req:
+                            self._release_slot(s)
+                            quarantined.append(s)
         self._pending.clear()
+        if quarantined:
+            # the tick already deactivated poisoned rows on-device; zeroing
+            # them keeps contaminated state out of the slot's next tenant
+            self._free_rows(sorted(set(quarantined)))
 
     def drain(self) -> List[Request]:
         """Sync pending emissions and return every request that finished
@@ -853,10 +1256,33 @@ class ServingEngine:
         out, self._finished = self._finished, []
         return out
 
-    def run_all(self) -> List[Request]:
+    def run_all(self, max_ticks: Optional[int] = None) -> List[Request]:
+        """Drive until queue and slots are empty.
+
+        ``max_ticks`` (default: the engine's ``max_ticks``; None = no
+        watchdog) bounds the number of driver iterations — a wedged engine
+        (admission stalled, a slot that never finishes) raises
+        :class:`~repro.serving.resilience.WatchdogExpired` carrying a
+        diagnostic dump (queue depth, active slots, per-slot tick budgets,
+        every resilience counter) instead of spinning forever. Requests
+        already finished stay drainable after the raise."""
+        if max_ticks is None:
+            max_ticks = self.max_ticks
         done: List[Request] = []
+        iters = 0
         while self.queue or self._occupied():
+            if max_ticks is not None and iters >= max_ticks:
+                self._sync()
+                # hand the already-finished work back through drain()
+                self._finished = done + self._finished
+                diag = self._diagnostics()
+                raise WatchdogExpired(
+                    f"run_all exceeded max_ticks={max_ticks} with work "
+                    f"still pending: queue depth {diag['queue_depth']}, "
+                    f"active slots {diag['active_slots']}, per-slot state "
+                    f"{diag['slots']}", diag)
             self.step()
+            iters += 1
             # periodic drain bounds the pending-buffer growth (one record
             # per tick) and, with EOS, discovers freed slots early
             if self.decode_calls % self.drain_every == 0:

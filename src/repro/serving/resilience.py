@@ -1,0 +1,215 @@
+"""Overload-hardening primitives for the serving stack.
+
+The paper's premise is serving a fixed workload from a *hard* resource
+budget (everything lives in on-chip memory; there is no DRAM to spill
+into), and the roadmap's north star makes overload the normal operating
+regime, not an exception. This module holds the host-side vocabulary the
+:class:`~repro.serving.engine.ServingEngine` uses to stay live under that
+regime — nothing here touches a device array:
+
+  * **Bounded admission** — :class:`SubmitOutcome` (the structured
+    accept/shed result of ``submit()``; an ``int`` subclass so existing
+    ``uid = eng.submit(...)`` callers keep working) and
+    :class:`SubmitRejected` (a ``ValueError`` subclass carrying a
+    machine-readable ``reason`` code shared with the shed path).
+  * **Deadlines / preemption / quarantine outcomes** — the
+    :data:`STATUS` vocabulary a drained ``Request`` reports
+    (``ok``/``deadline``/``shed``/``poisoned``).
+  * **Degradation ladder** — :func:`degrade_step` applies the next
+    fallback when a jitted tick call fails: a speculative engine drops to
+    the plain tick (drafter abandoned, target stream unaffected), a
+    kernel-mode engine drops to the dequant/ref graphs. Each step rebuilds
+    the engine's jits; if no step is left the original failure propagates.
+  * **Watchdog** — :class:`WatchdogExpired`, raised by
+    ``run_all(max_ticks=)`` with a diagnostic dump (queue depth, active
+    slots, per-slot tick budgets) instead of spinning forever.
+  * **Deterministic fault injection** — :class:`FaultPlan` describes NaN
+    logits (per tick x slot), one-shot jitted-tick failures, and admission
+    delays; the engine's test-only ``fault_plan=`` hook threads it through
+    every recovery path above so resilience is *exercised* by tests and
+    the CI chaos-smoke run, not just claimed. NaN injection rides the
+    ``poison`` bias vector that is ALWAYS an input of the jitted tick
+    (zeros in healthy operation), so injecting never retraces and the
+    on-device health check it exercises costs no extra sync — the
+    per-slot non-finite flag is one more array in the ``_pending`` drain.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, Optional, Tuple
+
+__all__ = ["SHED_POLICIES", "STATUS", "SubmitOutcome", "SubmitRejected",
+           "InjectedFault", "WatchdogExpired", "FaultPlan", "degrade_step"]
+
+SHED_POLICIES = ("reject", "drop_oldest")
+
+# terminal Request.status values a drained request can carry
+STATUS = ("ok",          # finished normally (budget or EOS)
+          "deadline",    # cancelled mid-stream/in-queue past its deadline
+          "shed",        # dropped by bounded admission (drop_oldest)
+          "poisoned")    # quarantined: non-finite logits in its slot
+
+
+class SubmitRejected(ValueError):
+    """``submit()`` refused a request. ``reason`` is a machine-readable
+    code (``empty_prompt`` / ``bad_max_new`` / ``too_long`` /
+    ``bad_deadline``) shared with the shed path's outcome reasons;
+    ``ValueError`` stays the base class so pre-existing callers that catch
+    or ``pytest.raises`` ValueError keep working."""
+
+    def __init__(self, reason: str, message: str):
+        super().__init__(message)
+        self.reason = reason
+
+
+class SubmitOutcome(int):
+    """Structured result of ``submit()``.
+
+    An ``int`` subclass whose value is the accepted request's uid (uids
+    start at 1), or 0 when the request was shed — so truthiness means
+    "admitted", and legacy callers that use the return value as the uid
+    (``uid_to_prompt[eng.submit(p)] = p``) are unchanged. ``reason`` is
+    None on acceptance or the shed reason code (``queue_full``);
+    ``shed`` lists uids of QUEUED requests evicted to make room
+    (``drop_oldest`` policy)."""
+
+    accepted: bool
+    reason: Optional[str]
+    shed: Tuple[int, ...]
+
+    def __new__(cls, uid: int, *, accepted: bool,
+                reason: Optional[str] = None,
+                shed: Tuple[int, ...] = ()):
+        self = super().__new__(cls, uid)
+        self.accepted = accepted
+        self.reason = reason
+        self.shed = tuple(shed)
+        return self
+
+    @property
+    def uid(self) -> Optional[int]:
+        return int(self) if self.accepted else None
+
+    def __repr__(self):
+        if self.accepted:
+            extra = f", shed={self.shed}" if self.shed else ""
+            return f"SubmitOutcome(uid={int(self)}{extra})"
+        return f"SubmitOutcome(rejected, reason={self.reason!r})"
+
+
+class InjectedFault(RuntimeError):
+    """The failure :class:`FaultPlan` raises in place of a jitted tick
+    call — a distinct type so tests can tell injected faults from real
+    ones, while the engine's recovery path treats both identically."""
+
+
+class WatchdogExpired(RuntimeError):
+    """``run_all(max_ticks=)`` exceeded its tick budget with work still
+    queued or resident — the engine is wedged (or the budget is simply too
+    small for the workload). Carries ``diagnostics``: queue depth, active
+    slot count, per-slot ``{slot: (uid, ticks_left)}``, and the engine
+    counters, so the dump names what is stuck instead of spinning."""
+
+    def __init__(self, message: str, diagnostics: Dict):
+        super().__init__(message)
+        self.diagnostics = diagnostics
+
+
+def _as_tick_slot_pairs(pairs) -> FrozenSet[Tuple[int, int]]:
+    return frozenset((int(t), int(s)) for t, s in pairs)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic schedule of injected faults, keyed on the engine's
+    ``decode_calls`` tick counter (admission delays are checked at the
+    spin-up preceding the tick with that index).
+
+    ``nan_logits``   {(tick, slot), ...}: add NaN to that slot's logits
+                     inside the jitted tick — exercises the on-device
+                     health check and the quarantine path.
+    ``fail_ticks``   {tick, ...}: raise :class:`InjectedFault` IN PLACE of
+                     the jitted tick call, once per listed tick —
+                     exercises the degradation ladder. (The fault fires
+                     before the call, so donated buffers are intact and
+                     the retried tick sees consistent state.)
+    ``delay_admission`` {tick, ...}: skip the admission round at that
+                     tick — exercises queue aging under deferred
+                     admission (deadlines can expire while queued).
+
+    Instances are immutable; one-shot consumption state (``fail_ticks``
+    firing once each) lives in the engine, not here, so a plan can be
+    shared across engines and reruns deterministically.
+    """
+
+    nan_logits: FrozenSet[Tuple[int, int]] = frozenset()
+    fail_ticks: FrozenSet[int] = frozenset()
+    delay_admission: FrozenSet[int] = frozenset()
+
+    def __init__(self, nan_logits=(), fail_ticks=(), delay_admission=()):
+        object.__setattr__(self, "nan_logits",
+                           _as_tick_slot_pairs(nan_logits))
+        object.__setattr__(self, "fail_ticks",
+                           frozenset(int(t) for t in fail_ticks))
+        object.__setattr__(self, "delay_admission",
+                           frozenset(int(t) for t in delay_admission))
+
+    # --- queries the engine makes, all O(1)-ish on host ints -----------------
+
+    def nan_slots_at(self, tick: int) -> Tuple[int, ...]:
+        return tuple(sorted(s for t, s in self.nan_logits if t == tick))
+
+    def fails_at(self, tick: int) -> bool:
+        return tick in self.fail_ticks
+
+    def delays_admission_at(self, tick: int) -> bool:
+        return tick in self.delay_admission
+
+    @property
+    def empty(self) -> bool:
+        return not (self.nan_logits or self.fail_ticks
+                    or self.delay_admission)
+
+    @classmethod
+    def random(cls, seed: int, *, ticks: int, slots: int,
+               nan_rate: float = 0.05, fail_rate: float = 0.05,
+               delay_rate: float = 0.1) -> "FaultPlan":
+        """A seeded chaos schedule over ``ticks`` x ``slots`` — the CI
+        chaos-smoke generator. Same seed, same plan."""
+        import random as _random
+        rng = _random.Random(seed)
+        nan, fail, delay = [], [], []
+        for t in range(ticks):
+            if rng.random() < nan_rate:
+                nan.append((t, rng.randrange(slots)))
+            if rng.random() < fail_rate:
+                fail.append(t)
+            if rng.random() < delay_rate:
+                delay.append(t)
+        return cls(nan_logits=nan, fail_ticks=fail, delay_admission=delay)
+
+
+def degrade_step(engine) -> Optional[str]:
+    """Apply the next degradation-ladder step to ``engine`` after a tick
+    failure. Returns a label describing the step taken, or None when the
+    ladder is exhausted (the caller re-raises the original failure).
+
+    Ladder (each step rebuilds the engine's jitted graphs; engine state —
+    caches, per-slot masks, host bookkeeping — is untouched, which is
+    sound because injected/trace-time failures raise before any donated
+    buffer is consumed):
+
+      1. speculative tick -> plain tick: the drafter and its cache are
+         abandoned; the target stream is unaffected (spec is exact, so
+         dropping it changes throughput, never tokens).
+      2. kernel graphs -> fallback graphs: ``matmul_mode='dequant'``,
+         ``attn_mode='ref'`` — the parity-oracle paths every kernel is
+         tested against.
+    """
+    if engine._spec:
+        engine._disable_spec()
+        return "spec->plain"
+    if engine.matmul_mode != "dequant" or engine.attn_mode != "ref":
+        engine._fallback_modes()
+        return "kernel->fallback"
+    return None

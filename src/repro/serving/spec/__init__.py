@@ -49,7 +49,8 @@ __all__ = ["draft_chain", "verify_tokens", "spec_accept", "emit_counts",
 
 def spec_decode_tick(mod, dmod, params, dparams, cfg, dcfg, cache, dcache,
                      pending, active, *, spec_k: int, temperature: float,
-                     key, mkw, dmkw, attn_kw=None, dattn_kw=None):
+                     key, mkw, dmkw, attn_kw=None, dattn_kw=None,
+                     logit_bias=None):
     """One speculative tick: draft -> verify -> accept -> rollback of BOTH
     caches. Pure function of device arrays (callers jit it, alone or inside
     a while_loop).
@@ -57,15 +58,25 @@ def spec_decode_tick(mod, dmod, params, dparams, cfg, dcfg, cache, dcache,
     ``pending`` (B, 1) is each row's sampled-but-unfed token; ``active``
     (B,) rows advance, inactive rows are frozen (their scratch-writes fully
     rewound, their pending token held). Returns ``(cache, dcache,
-    accept_len (B,), out_tokens (B, spec_k+1), new_pending (B, 1))`` —
-    budget/EOS window truncation (``emit_counts``) is the caller's, since
-    only it knows the budget semantics.
+    accept_len (B,), out_tokens (B, spec_k+1), new_pending (B, 1),
+    row_ok (B,))`` — budget/EOS window truncation (``emit_counts``) is the
+    caller's, since only it knows the budget semantics.
+
+    ``row_ok`` is the on-device health check: True iff every verify logit
+    of that row is finite. A poisoned row (NaN/Inf anywhere in its target
+    logits) is treated as INACTIVE for this tick — its scratch-writes are
+    fully rewound, its pending token held, nothing committed — so callers
+    can quarantine it from the flag alone without ever sampling from the
+    corrupt distribution. ``logit_bias`` (B,) is added to the verify
+    logits before acceptance; the engine threads its fault-injection
+    poison vector through it (zeros in healthy operation, so the graph is
+    identical either way).
 
     Commit arithmetic (the one copy of it): both caches advanced by
     ``spec_k+1`` writes in lockstep, and the committed stream grows by the
-    pending token plus ``accept_len`` accepted drafts, so active rows
-    rewind to ``len - (spec_k+1) + 1 + accept_len`` and inactive rows all
-    the way back to ``len - (spec_k+1)``.
+    pending token plus ``accept_len`` accepted drafts, so advancing rows
+    rewind to ``len - (spec_k+1) + 1 + accept_len`` and frozen (inactive
+    or poisoned) rows all the way back to ``len - (spec_k+1)``.
     """
     kd, ka = jax.random.split(key)
     dcache, dtraj, drafts, dlogits = draft_chain(
@@ -73,12 +84,18 @@ def spec_decode_tick(mod, dmod, params, dparams, cfg, dcfg, cache, dcache,
         temperature=temperature, key=kd, mkw=dmkw, attn_kw=dattn_kw)
     tlogits, cache, vtraj = verify_tokens(params, cache, pending, drafts,
                                           cfg, **mkw, **(attn_kw or {}))
+    if logit_bias is not None:
+        tlogits = tlogits + logit_bias[:, None, None]
+    # health check: one cheap reduction per row, no extra output sync —
+    # the flag rides the caller's existing drain
+    row_ok = jnp.all(jnp.isfinite(tlogits), axis=(1, 2))
+    advance = active & row_ok
     a, out, nxt = spec_accept(drafts, dlogits, tlogits,
                               temperature=temperature, key=ka)
     t1 = spec_k + 1
     rows = jnp.arange(pending.shape[0])
-    commit = jnp.where(active, cache["len"] - t1 + 1 + a, cache["len"] - t1)
+    commit = jnp.where(advance, cache["len"] - t1 + 1 + a, cache["len"] - t1)
     cache = mod.rollback_cache(cache, rows, commit, vtraj)
     dcache = dmod.rollback_cache(dcache, rows, commit, dtraj)
-    new_pending = jnp.where(active[:, None], nxt[:, None], pending)
-    return cache, dcache, a, out, new_pending
+    new_pending = jnp.where(advance[:, None], nxt[:, None], pending)
+    return cache, dcache, a, out, new_pending, row_ok

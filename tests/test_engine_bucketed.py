@@ -133,12 +133,16 @@ def test_mixed_buckets_one_round_two_prefills():
 
 def test_submit_rejects_empty_prompt():
     """A [] prompt must fail fast at submit() with ValueError, not crash
-    deep inside prefill with a (1, 0) token array (regression)."""
+    deep inside prefill with a (1, 0) token array (regression). The raise
+    is a SubmitRejected carrying a machine-readable reason code."""
+    from repro.serving.resilience import SubmitRejected
     cfg, params, policy = _setup("dense", "w")
     eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=16,
                         dtype=jnp.float32)
-    with pytest.raises(ValueError, match="at least one token"):
+    with pytest.raises(ValueError, match="at least one token") as ei:
         eng.submit([], max_new=4)
+    assert isinstance(ei.value, SubmitRejected)
+    assert ei.value.reason == "empty_prompt"
     assert eng.queue == []                       # nothing half-enqueued
     eng.submit([1, 2], max_new=4)                # engine still usable
     done = eng.run_all()

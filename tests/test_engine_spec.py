@@ -106,7 +106,7 @@ def test_spec_tick_single_jitted_call_and_no_callbacks():
     jaxpr = jax.make_jaxpr(eng._spec_tick)(
         eng.params, eng.draft_params, eng.cache, eng.draft_cache,
         eng._tokens, eng._active, eng._emitted, eng._budget,
-        jax.random.PRNGKey(0))
+        eng._poison0, jax.random.PRNGKey(0))
     assert not check_no_host_callback(jaxpr)
 
 

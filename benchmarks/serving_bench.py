@@ -46,6 +46,17 @@ tokens-per-tick multiplier is the whole point), plus the drain-synced
 accepted-tokens-per-tick > 1 in every swept cell instead of the qp
 monotonicity curve.
 
+``--mix crash`` exercises the durability layer instead of the
+amortization curve: each cell runs with periodic snapshots + a write-ahead
+journal, injects a process kill mid-run (``FaultPlan.crash_at_tick``),
+then recovers a FRESH engine — restore the latest snapshot, replay the
+journal tail — and finishes the workload. Reported per cell: snapshot
+step restored, journal events replayed, requests resubmitted, restore
+seconds, and the zero-loss verdict (pre-crash drains + recovered outputs
+token-identical to an uncrashed reference at T=0). ``--check`` gates on
+zero accepted-token loss AND an actual snapshot restore in every cell;
+the artifact goes to ``BENCH_serving_durability.json`` by default.
+
 Results are also written as a JSON artifact (default ``BENCH_serving.json``)
 so CI can archive the perf trajectory.
 
@@ -80,6 +91,10 @@ MIXES = {
     # slot-tick service capacity under bounded admission + mixed deadlines
     # + preemption — measures shed/deadline-miss/latency, not amortization
     "overload": [3, 8, 5, 12, 4, 16, 7, 9],
+    # crash: kill the engine mid-run, recover a FRESH engine from the
+    # latest snapshot + journal tail — measures restore/replay cost and
+    # verifies zero accepted-token loss (recovered == uncrashed at T=0)
+    "crash": [3, 8, 5, 12, 4, 16, 7, 9],
 }
 # per-mix defaults for the knobs whose sensible values depend on prompt
 # scale: (slots, requests, max_new, repeats, attn_chunk)
@@ -87,6 +102,7 @@ MIX_DEFAULTS = {
     "mixed": ("1,4,8,16", 16, 24, 3, 1024),
     "long": ("1,2", 4, 8, 1, 256),
     "overload": ("2,4", 24, 12, 1, 1024),
+    "crash": ("2,4", 12, 12, 1, 1024),
 }
 
 
@@ -234,13 +250,99 @@ def bench_overload(params, cfg, policy, *, slots: int, requests: int,
             "attn_mode": attn_mode, "kv_bits": kv_bits}
 
 
+def bench_crash(params, cfg, policy, *, slots: int, requests: int,
+                max_new: int, lengths, matmul_mode: str = "auto",
+                attn_mode: str = "auto", kv_bits=None,
+                attn_chunk: int = 1024, snapshot_every: int = 8,
+                max_ticks: int = 4096) -> dict:
+    """Kill-and-recover scenario: run with periodic snapshots + a
+    write-ahead journal, inject a process kill mid-run, then recover a
+    FRESH engine (restore latest snapshot, replay the journal tail) and
+    finish the workload. Reports restore/replay cost (``restore_secs``,
+    ``replayed_events``, ``resubmitted``) and verifies ZERO accepted-token
+    loss: the union of pre-crash drains and the recovered run must be
+    token-identical to an uncrashed reference at T=0 (``lost_requests``
+    and ``mismatched_requests`` must both be 0 — the --check gate)."""
+    import os
+    import shutil
+    import tempfile
+
+    from repro.serving.resilience import FaultPlan, InjectedCrash
+
+    def mk(**kw):
+        return ServingEngine(params, cfg, policy=policy, slots=slots,
+                             max_len=max(lengths) + max_new + 1,
+                             dtype=jnp.float32, matmul_mode=matmul_mode,
+                             attn_mode=attn_mode, kv_bits=kv_bits,
+                             attn_chunk=attn_chunk, **kw)
+
+    prompts = _prompts(requests, lengths)
+    ref_eng = mk()
+    for p in prompts:
+        ref_eng.submit(p, max_new=max_new)
+    ref = {r.uid: tuple(r.out) for r in ref_eng.run_all(max_ticks=max_ticks)}
+
+    tmp = tempfile.mkdtemp(prefix="crashbench_")
+    snaps, jpath = os.path.join(tmp, "snaps"), os.path.join(tmp, "wal.jsonl")
+    # kill roughly mid-workload: past at least one periodic snapshot, well
+    # before the last request finishes
+    crash_tick = max(snapshot_every + 1, (requests * max_new) // (2 * slots))
+    eng = mk(snapshot_dir=snaps, snapshot_every=snapshot_every,
+             journal=jpath, fault_plan=FaultPlan(crash_at_tick=crash_tick))
+    for p in prompts:
+        eng.submit(p, max_new=max_new)
+    delivered: dict = {}
+    t0 = time.perf_counter()
+    ticks = 0
+    try:
+        while eng.queue or eng._occupied():
+            eng.step()
+            ticks += 1
+            delivered.update({r.uid: tuple(r.out) for r in eng.drain()})
+            if ticks > max_ticks:
+                break
+    except InjectedCrash:
+        pass
+    uptime = time.perf_counter() - t0
+
+    t1 = time.perf_counter()
+    fresh = mk(snapshot_dir=snaps, journal=jpath)
+    stats = fresh.recover()
+    restore_secs = time.perf_counter() - t1
+    t2 = time.perf_counter()
+    recovered = {r.uid: tuple(r.out)
+                 for r in fresh.run_all(max_ticks=max_ticks)}
+    finish_secs = time.perf_counter() - t2
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    merged = {**delivered, **recovered}
+    lost = [u for u in ref if u not in merged]
+    mismatched = [u for u in ref if u in merged and merged[u] != ref[u]]
+    toks = sum(len(v) for v in recovered.values())
+    return {"slots": slots, "requests": requests,
+            "crash_tick": crash_tick, "uptime_secs": uptime,
+            "snapshot_every": snapshot_every,
+            "restored_step": stats["restored_step"],
+            "replayed_events": stats["replayed_events"],
+            "resubmitted": stats["resubmitted"],
+            "restore_secs": restore_secs, "finish_secs": finish_secs,
+            "recovered_tokens": toks,
+            "delivered_pre_crash": len(delivered),
+            "lost_requests": len(lost),
+            "mismatched_requests": len(mismatched),
+            "zero_loss": not lost and not mismatched,
+            "attn_mode": attn_mode, "kv_bits": kv_bits}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--mix", default="mixed", choices=sorted(MIXES),
                     help="request traffic: 'mixed' short prompts over the "
                          "small admission buckets, 'long' 1k-4k prompts "
-                         "where prefill attention dominates admission")
+                         "where prefill attention dominates admission, "
+                         "'overload' 2x-capacity arrivals under bounded "
+                         "admission, 'crash' kill-and-recover durability")
     ap.add_argument("--slots", default=None,
                     help="comma-separated slot counts to sweep "
                          "(default per mix: mixed=1,4,8,16 long=1,2)")
@@ -371,6 +473,57 @@ def main():
               and all(r["completed_ok"] > 0 for r in cells))
         print(f"overload gate (no deadlock, shed-rate < 1.0, some requests "
               f"complete) over {len(cells)} cells: {ok}")
+        if args.check and not ok:
+            raise SystemExit(1)
+        return
+
+    if args.mix == "crash":
+        out = args.out
+        if out == "BENCH_serving.json":          # mix-specific default
+            out = "BENCH_serving_durability.json"
+        print(f"{'form':>4} {'slots':>5} {'ctick':>5} {'snap':>5} "
+              f"{'replay':>6} {'resub':>5} {'restore_s':>9} {'finish_s':>8} "
+              f"{'lost':>4} {'mism':>4} {'0loss':>5}")
+        for form in args.forms.split(","):
+            p, pol = form_params[form]
+            results[form] = []
+            for slots in slot_counts:
+                r = bench_crash(p, cfg, pol, slots=slots,
+                                requests=args.requests,
+                                max_new=args.max_new, lengths=lengths,
+                                matmul_mode=args.matmul_mode,
+                                attn_mode=args.attn_mode, kv_bits=kv_bits,
+                                attn_chunk=args.attn_chunk)
+                results[form].append(r)
+                print(f"{form:>4} {r['slots']:>5} {r['crash_tick']:>5} "
+                      f"{str(r['restored_step']):>5} "
+                      f"{r['replayed_events']:>6} {r['resubmitted']:>5} "
+                      f"{r['restore_secs']:>9.3f} {r['finish_secs']:>8.1f} "
+                      f"{r['lost_requests']:>4} {r['mismatched_requests']:>4} "
+                      f"{str(r['zero_loss']):>5}")
+        if out:
+            artifact = {
+                "bench": "serving_durability", "arch": cfg.name,
+                "reduced": {"layers": args.layers, "d_model": args.d_model,
+                            "vocab": args.vocab},
+                "requests": args.requests, "max_new": args.max_new,
+                "mix": args.mix, "mix_lengths": lengths,
+                "matmul_mode": args.matmul_mode,
+                "attn_mode": args.attn_mode, "kv_bits": kv_bits,
+                "results": results,
+            }
+            with open(out, "w") as f:
+                json.dump(artifact, f, indent=2)
+            print(f"wrote {out}")
+        cells = [r for rs in results.values() for r in rs]
+        # durability gate: every cell must recover with ZERO accepted-token
+        # loss (recovered+pre-crash drains token-identical to an uncrashed
+        # run at T=0) AND must actually have restored from a snapshot
+        ok = (bool(cells)
+              and all(r["zero_loss"] for r in cells)
+              and all(r["restored_step"] is not None for r in cells))
+        print(f"durability gate (zero accepted-token loss, snapshot "
+              f"restored) over {len(cells)} cells: {ok}")
         if args.check and not ok:
             raise SystemExit(1)
         return

@@ -7,6 +7,12 @@ which is the checkpoint/restart story for node failures and elastic scaling.
 Format: <dir>/step_<N>/arrays.npz + meta.json. Writes go to a tmp dir and are
 atomically renamed, so a killed job never leaves a half-written checkpoint
 (restore scans only *complete* step dirs).
+
+The sibling :mod:`repro.checkpoint.integrity` module applies the same
+durability story to the SERVING weight store: golden per-container CRC
+manifests over the packed level/scale arrays, an in-graph fingerprint
+probe that detects (and localizes) bit flips in the resident image, and
+the golden copy self-heal reloads corrupted containers from.
 """
 from __future__ import annotations
 
@@ -41,7 +47,12 @@ def save(ckpt_dir: str, step: int, tree: Any, *, meta: Optional[Dict] = None,
         lambda x: jax.device_get(x) if hasattr(x, "device") else x, tree))
     np.savez(os.path.join(tmp, "arrays.npz"), **flat)
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, **(meta or {})}, f)
+        # extension dtypes (bfloat16, fp8) survive np.savez only as raw
+        # void bytes; record the true dtypes so restore can view them back
+        # instead of silently degrading the tree
+        json.dump({"step": step,
+                   "_dtypes": {k: str(v.dtype) for k, v in flat.items()},
+                   **(meta or {})}, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -81,9 +92,14 @@ def restore(ckpt_dir: str, step: Optional[int] = None, *,
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step_{step:012d}")
     with np.load(os.path.join(path, "arrays.npz")) as z:
-        tree = unflatten({k: z[k] for k in z.files})
+        flat = {k: z[k] for k in z.files}
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
+    dtypes = meta.pop("_dtypes", {})
+    for k, want in dtypes.items():
+        if k in flat and str(flat[k].dtype) != want:
+            flat[k] = flat[k].view(np.dtype(want))   # bf16 et al. round-trip
+    tree = unflatten(flat)
     if shardings is not None:
         flat_s = flatten_with_path(shardings)
         flat_t = flatten_with_path(tree)

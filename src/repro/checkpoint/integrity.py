@@ -1,0 +1,181 @@
+"""Weight-store integrity: golden manifests + in-graph corruption probes.
+
+The paper's deployment model keeps the packed 3-bit weight image resident
+in on-chip memory for the life of the service — there is no per-batch DRAM
+reload to launder soft errors out, so a flipped bit in a packed container
+serves garbage *forever* unless something notices ("A Survey of FPGA-Based
+Neural Network Accelerator" flags exactly this reliability gap for on-chip
+deployments). This module is the noticing machinery:
+
+  * **Golden manifest** — per-container CRC32 checksums over the protected
+    leaves (packed ``qp`` words, ``q`` levels, ``delta`` scales; every
+    weight leaf for float master trees), computed once at load
+    (:func:`build_manifest`) and persisted with a golden copy of the
+    leaves themselves (:func:`save_golden`) so a detected corruption can
+    be healed by reloading just the bad container.
+  * **In-graph probe** — :func:`make_probe` builds a jitted *canary
+    matvec*: each protected leaf, viewed as raw words, is dotted with a
+    fixed odd-multiplier vector in wrapping uint32 arithmetic
+    (``fingerprint = bits @ r  (mod 2**32)``). Any single-bit flip at word
+    ``j`` perturbs the sum by ``r_j * 2**b``, which is nonzero mod 2**32
+    for every bit position because ``r_j`` is odd — so one cheap pass over
+    the weight store (the same traffic as one decode matvec) detects any
+    single-bit corruption AND localizes it to the container, with no host
+    checksum scan on the hot path. The serving engine compares the probe's
+    (P,) fingerprint vector against the golden one every
+    ``integrity_every`` ticks.
+
+Host-side verification (:func:`verify_manifest`) cross-checks the same
+leaves against the CRC manifest — the slow, exact oracle the probe's
+fingerprints are tested against, and the post-heal confirmation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.treeutil import flatten_with_path, tree_get
+
+__all__ = ["protected_paths", "build_manifest", "verify_manifest",
+           "save_manifest", "load_manifest", "make_probe", "fingerprints",
+           "save_golden", "load_golden"]
+
+# the weight-store leaves integrity protects in a serve-form tree: packed
+# container words, quantized levels, and their per-channel scales
+_SERVE_LEAVES = ("qp", "q", "delta")
+
+
+def _basename(path: str) -> str:
+    return path.rsplit("/", 1)[-1]
+
+
+def protected_paths(tree: Any) -> List[str]:
+    """Tree paths of the leaves the integrity machinery covers: the packed
+    level/scale arrays (``qp``/``q``/``delta``) when the tree is a serve
+    form, else every array leaf (float master trees — the whole store is
+    the resident image then)."""
+    flat = flatten_with_path(tree)
+    serve = [p for p in flat if _basename(p) in _SERVE_LEAVES]
+    if serve:
+        return sorted(serve)
+    return sorted(p for p, v in flat.items() if hasattr(v, "dtype"))
+
+
+def _crc(leaf) -> int:
+    a = np.ascontiguousarray(np.asarray(leaf))
+    return zlib.crc32(a.tobytes()) & 0xFFFFFFFF
+
+
+def build_manifest(tree: Any,
+                   paths: Optional[List[str]] = None) -> Dict[str, Dict]:
+    """{path: {crc32, shape, dtype}} over the protected leaves — computed
+    at load time, before anything could have corrupted the store."""
+    paths = protected_paths(tree) if paths is None else paths
+    out: Dict[str, Dict] = {}
+    for p in paths:
+        leaf = np.asarray(tree_get(tree, p))
+        out[p] = {"crc32": _crc(leaf), "shape": list(leaf.shape),
+                  "dtype": str(leaf.dtype)}
+    return out
+
+
+def verify_manifest(tree: Any, manifest: Dict[str, Dict]) -> List[str]:
+    """Paths whose current bytes disagree with the manifest (crc or
+    shape/dtype) — empty means the store matches its golden state. This is
+    the exact host-side oracle; the serving hot path uses the in-graph
+    probe and only falls back here for post-heal confirmation."""
+    bad: List[str] = []
+    for p, rec in manifest.items():
+        leaf = np.asarray(tree_get(tree, p))
+        if (list(leaf.shape) != rec["shape"]
+                or str(leaf.dtype) != rec["dtype"]
+                or _crc(leaf) != rec["crc32"]):
+            bad.append(p)
+    return sorted(bad)
+
+
+def save_manifest(path: str, manifest: Dict[str, Dict]):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def load_manifest(path: str) -> Dict[str, Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+# --- in-graph canary probe ----------------------------------------------------
+
+def _as_words(x: jnp.ndarray) -> jnp.ndarray:
+    """Raw machine words of a leaf as a flat uint32 vector — bit-exact
+    view, so the fingerprint sees every bit of the stored representation
+    (a float NaN payload flip is as visible as an int level flip)."""
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        word = {1: jnp.uint8, 2: jnp.uint16, 4: jnp.uint32}[x.dtype.itemsize]
+        x = jax.lax.bitcast_convert_type(x, word)
+    return x.reshape(-1).astype(jnp.uint32)
+
+
+def _fingerprint_one(x: jnp.ndarray) -> jnp.ndarray:
+    v = _as_words(x)
+    # Knuth multiplicative-hash weights forced odd: r_j * 2^b != 0 mod 2^32
+    # for any bit b < 32, so a single flipped bit always moves the sum
+    r = (jnp.arange(v.shape[0], dtype=jnp.uint32)
+         * jnp.uint32(2654435761)) | jnp.uint32(1)
+    return jnp.sum(v * r, dtype=jnp.uint32)
+
+
+def make_probe(tree: Any, paths: Optional[List[str]] = None
+               ) -> Tuple[List[str], Callable[[Any], jnp.ndarray]]:
+    """(paths, probe_fn): ``probe_fn(tree) -> (len(paths),) uint32`` — the
+    jittable canary pass. One fingerprint per protected container, so a
+    mismatch against the golden vector localizes the corruption without
+    any host-side scan."""
+    paths = protected_paths(tree) if paths is None else paths
+
+    def probe(t):
+        return jnp.stack([_fingerprint_one(tree_get(t, p)) for p in paths])
+
+    return paths, probe
+
+
+def fingerprints(tree: Any, paths: Optional[List[str]] = None) -> np.ndarray:
+    """One-shot host-visible fingerprints (builds and runs the probe)."""
+    paths, probe = make_probe(tree, paths)
+    return np.asarray(jax.jit(probe)(tree))
+
+
+# --- golden store -------------------------------------------------------------
+
+def save_golden(golden_dir: str, tree: Any,
+                paths: Optional[List[str]] = None) -> Dict[str, Dict]:
+    """Persist the golden copy of the protected leaves + their manifest
+    under ``golden_dir`` (atomic, via the checkpoint step machinery).
+    Returns the manifest. This is what self-heal reloads from: corruption
+    of the resident store is repaired container-by-container without
+    touching the healthy leaves."""
+    from repro import checkpoint
+    paths = protected_paths(tree) if paths is None else paths
+    flat = {p: np.asarray(tree_get(tree, p)) for p in paths}
+    manifest = build_manifest(tree, paths)
+    checkpoint.save(golden_dir, 0, flat, meta={"kind": "golden"})
+    save_manifest(os.path.join(golden_dir, "manifest.json"), manifest)
+    return manifest
+
+
+def load_golden(golden_dir: str
+                ) -> Tuple[Dict[str, np.ndarray], Dict[str, Dict]]:
+    """(flat {path: array}, manifest) back from :func:`save_golden`."""
+    from repro import checkpoint
+    tree, _ = checkpoint.restore(golden_dir, 0)
+    manifest = load_manifest(os.path.join(golden_dir, "manifest.json"))
+    return flatten_with_path(tree), manifest

@@ -9,7 +9,7 @@ import numpy as np
 
 __all__ = [
     "map_with_path", "flatten_with_path", "unflatten", "tree_size",
-    "tree_nbytes", "role_of", "any_nan",
+    "tree_nbytes", "tree_get", "tree_set", "role_of", "any_nan",
 ]
 
 
@@ -48,6 +48,34 @@ def unflatten(flat: Dict[str, Any]) -> Any:
             node = node.setdefault(p, {})
         node[parts[-1]] = leaf
     return tree
+
+
+def tree_get(tree: Any, path: str) -> Any:
+    """Leaf at a ``flatten_with_path``-style '/'-joined path. KeyError names
+    the missing path segment."""
+    node = tree
+    for p in path.split("/"):
+        if not isinstance(node, dict) or p not in node:
+            raise KeyError(f"no leaf at {path!r} (missing {p!r})")
+        node = node[p]
+    return node
+
+
+def tree_set(tree: Any, path: str, value: Any) -> Any:
+    """Functional single-leaf update: a new tree with ``path`` replaced by
+    ``value``. Only the dicts along the path are copied (siblings shared),
+    so swapping one healed container never duplicates the rest of the
+    params. The path must already exist (this repairs leaves, it does not
+    grow trees)."""
+    parts = path.split("/")
+    tree_get(tree, path)                      # validate before copying
+    out = dict(tree)
+    node = out
+    for p in parts[:-1]:
+        node[p] = dict(node[p])
+        node = node[p]
+    node[parts[-1]] = value
+    return out
 
 
 def tree_size(tree: Any) -> int:

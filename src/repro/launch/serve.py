@@ -15,6 +15,14 @@ watchdog; prints the resilience counters after the run):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
         --requests 16 --slots 2 --queue-limit 8 --shed-policy drop_oldest \
         --deadline 48 --preempt 8 --max-ticks 512
+
+Durable serving (periodic snapshots + write-ahead journal + weight-store
+integrity probe; ``--resume`` recovers a killed run from the latest
+snapshot plus the journal tail before serving):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --reduced \
+        --requests 8 --slots 4 --snapshot-dir /tmp/snaps --snapshot-every 16 \
+        --journal /tmp/serve.jsonl --integrity-every 32 [--resume]
 """
 from __future__ import annotations
 
@@ -84,6 +92,27 @@ def main():
     ap.add_argument("--max-ticks", type=int, default=None,
                     help="watchdog: abort run_all with a diagnostic dump "
                          "after this many driver iterations")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durability: persist atomic engine snapshots here "
+                         "(device caches + host bookkeeping + RNG key)")
+    ap.add_argument("--snapshot-every", type=int, default=None,
+                    help="snapshot every N decode ticks (needs "
+                         "--snapshot-dir)")
+    ap.add_argument("--journal", default=None,
+                    help="write-ahead JSONL journal of submit/admit/commit/"
+                         "finish/shed events (the replay tail for --resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="recover before serving: restore the latest "
+                         "snapshot under --snapshot-dir and resubmit the "
+                         "journal tail (then ALSO submit this run's "
+                         "requests)")
+    ap.add_argument("--integrity-every", type=int, default=None,
+                    help="run the weight-store canary fingerprint probe "
+                         "every N ticks; detected corruption is healed "
+                         "from the golden copy")
+    ap.add_argument("--golden-dir", default=None,
+                    help="also persist the golden weight copy + CRC "
+                         "manifest here (checkpoint.integrity)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -118,7 +147,17 @@ def main():
                         shed_policy=args.shed_policy,
                         default_deadline=args.deadline,
                         preempt_after=args.preempt,
-                        max_ticks=args.max_ticks)
+                        max_ticks=args.max_ticks,
+                        snapshot_dir=args.snapshot_dir,
+                        snapshot_every=args.snapshot_every,
+                        journal=args.journal,
+                        integrity_every=args.integrity_every,
+                        golden_dir=args.golden_dir)
+    if args.resume:
+        stats = eng.recover()
+        print(f"recovered: snapshot step {stats['restored_step']}, "
+              f"{stats['replayed_events']} journal events replayed, "
+              f"{stats['resubmitted']} requests resubmitted")
     # mixed prompt lengths: exercises the length-bucketed batched admission
     lens = [4, 8, 5, 12, 3, 16, 7, 9]
     t0 = time.time()
@@ -149,6 +188,13 @@ def main():
               f"preemptions {eng.preempt_count}, "
               f"poisoned {eng.poisoned_count}, "
               f"queue peak {eng.queue_peak}")
+    if (args.snapshot_dir is not None or args.journal is not None
+            or args.integrity_every is not None):
+        print(f"durability: snapshots written {eng.snapshots_written}, "
+              f"journal events {eng.journal_events}, "
+              f"replayed {eng.replayed_events}, "
+              f"integrity probes {eng.integrity_probes}, "
+              f"heals {eng.heal_count}")
 
 
 if __name__ == "__main__":

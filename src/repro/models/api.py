@@ -82,7 +82,8 @@ from repro.models import hybrid, mamba2, transformer
 __all__ = ["get_model", "init_cache", "init_cache_abstract", "prefill",
            "decode_step", "verify_step", "rollback_cache",
            "spec_state_snapshot", "draft_of", "insert_prefill",
-           "insert_prefill_many", "free_slots"]
+           "insert_prefill_many", "free_slots", "cache_to_host",
+           "cache_from_host"]
 
 _FAMILY_MODULE = {
     "dense": transformer, "audio": transformer, "vlm": transformer,
@@ -216,6 +217,50 @@ def free_slots(cfg: ModelConfig, cache, slots):
     the committed-token snapshot a preemption requeues with is host-side
     (``Request.prompt + Request.out``), so nothing is read back here."""
     return get_model(cfg).free_slots(cache, slots)
+
+
+def cache_to_host(cfg: ModelConfig, cache):
+    """Snapshot a device cache/state tree to host numpy, dtype- and
+    structure-preserving — ONE bulk ``device_get`` for the whole tree (the
+    engine's async-drain discipline applies to durability too: no
+    per-leaf sync). The result round-trips exactly through
+    :func:`cache_from_host`: KV entries (bf16 or int8), per-token int8-KV
+    scale planes, SSM/conv state, SWA ring contents and per-slot ``len``
+    vectors all come back bit-identical, which is what makes a restored
+    engine's continuation token-identical rather than merely close."""
+    del cfg                        # families share the tree-of-arrays layout
+    return jax.device_get(cache)
+
+
+def cache_from_host(cfg: ModelConfig, host_cache, *, like=None):
+    """Re-materialize a :func:`cache_to_host` snapshot on device.
+
+    ``like`` (a live cache tree or ``init_cache_abstract`` result) makes
+    the restore VALIDATING: structure, shapes and dtypes must match the
+    engine's allocated cache exactly, so restoring a snapshot from a
+    mismatched config (different slots/max_len/kv_bits/family) fails
+    loudly at restore time instead of corrupting decode later."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    if like is not None:
+        flat_h = jax.tree_util.tree_leaves_with_path(host_cache)
+        flat_l = jax.tree_util.tree_leaves_with_path(like)
+        paths_h = [jax.tree_util.keystr(p) for p, _ in flat_h]
+        paths_l = [jax.tree_util.keystr(p) for p, _ in flat_l]
+        if paths_h != paths_l:
+            raise ValueError(
+                f"cache snapshot structure mismatch for {cfg.name}: "
+                f"snapshot has {paths_h}, engine expects {paths_l}")
+        for (p, h), (_, ref) in zip(flat_h, flat_l):
+            h = np.asarray(h)
+            if h.shape != ref.shape or h.dtype != np.dtype(ref.dtype):
+                raise ValueError(
+                    f"cache snapshot leaf {jax.tree_util.keystr(p)} is "
+                    f"{h.shape}/{h.dtype}, engine expects "
+                    f"{ref.shape}/{np.dtype(ref.dtype)} — snapshot was "
+                    f"taken under a different engine config")
+    return jax.tree_util.tree_map(jnp.asarray, host_cache)
 
 
 def insert_prefill(cfg: ModelConfig, cache, slot, src):

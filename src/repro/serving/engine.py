@@ -89,6 +89,23 @@ spinning forever. A deterministic ``resilience.FaultPlan`` (test-only
 ``fault_plan=`` hook) injects NaN logits / tick failures / admission
 delays so every recovery path is exercised by tests and CI.
 
+Durability (``serving.durability`` + ``checkpoint.integrity``): periodic
+SNAPSHOTS (``snapshot_dir``/``snapshot_every``, or explicit
+``snapshot()``) persist the complete engine state — device cache trees,
+per-slot vectors, the sampling RNG key, and all host bookkeeping — as
+atomic restore points; a WRITE-AHEAD JOURNAL (``journal=``) logs
+submit/admit/commit/finish/shed events per tick so ``recover()`` on a
+fresh engine restores the latest snapshot and resubmits the journal tail
+(uids/deadlines preserved — at T=0 the recomputed stream is
+token-identical, so a crash at ANY tick loses no accepted tokens); and a
+WEIGHT-INTEGRITY probe (``integrity_every``, optional ``golden_dir``)
+runs a cheap in-graph canary fingerprint over the packed
+``qp``/``q``/``delta`` containers every N ticks, detecting any single-bit
+soft error in the resident store (``FaultPlan.flip_bits`` injects them)
+and SELF-HEALING: the corrupt container is reloaded from its golden copy
+and every request whose tokens could have touched the corrupt weights is
+rewound to its prompt and requeued through normal admission.
+
 Caveat: for the ``moe`` family, expert-capacity dropping couples batch rows
 — a slot's tokens can depend on what else is in the batch. Dynamic
 activation scales (``policy.act_bits``) are per-ROW (each batch row gets
@@ -396,7 +413,12 @@ class ServingEngine:
                  default_deadline: Optional[int] = None,
                  preempt_after: Optional[int] = None,
                  max_ticks: Optional[int] = None, degrade: bool = True,
-                 fault_plan: Optional[FaultPlan] = None):
+                 fault_plan: Optional[FaultPlan] = None,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: Optional[int] = None,
+                 journal: Optional[str] = None,
+                 integrity_every: Optional[int] = None,
+                 golden_dir: Optional[str] = None):
         from repro.core.quant_dense import MATMUL_MODES
         if matmul_mode not in MATMUL_MODES:
             raise ValueError(f"matmul_mode must be one of {MATMUL_MODES}, "
@@ -409,7 +431,9 @@ class ServingEngine:
         for name, val in (("queue_limit", queue_limit),
                           ("default_deadline", default_deadline),
                           ("preempt_after", preempt_after),
-                          ("max_ticks", max_ticks)):
+                          ("max_ticks", max_ticks),
+                          ("snapshot_every", snapshot_every),
+                          ("integrity_every", integrity_every)):
             if val is not None and val < 1:
                 raise ValueError(f"{name} must be >= 1 or None, got {val}")
         self.params, self.cfg, self.policy = params, cfg, policy
@@ -490,6 +514,28 @@ class ServingEngine:
         self.poisoned_count = 0               # slots quarantined (non-finite)
         self.fallback_events: List[Tuple[int, str]] = []  # (tick, ladder step)
         self.queue_peak = 0                   # high-water queue depth
+        # durability: periodic snapshots + write-ahead journal (see
+        # serving.durability) and the weight-store integrity probe + heal
+        # (see checkpoint.integrity)
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = snapshot_every
+        self.integrity_every = integrity_every
+        self.golden_dir = golden_dir
+        self.snapshots_written = 0            # snapshot() completions
+        self.journal_events = 0               # events appended to the WAL
+        self.replayed_events = 0              # journal events replayed in
+        self.integrity_probes = 0             # canary passes run
+        self.heal_count = 0                   # containers reloaded from golden
+        self._last_snapshot_tick = -1         # don't re-snapshot a tick
+        self._crashed_ticks: set = set()      # one-shot crash_at_tick consumed
+        self._flipped_ticks: set = set()      # one-shot flip_bits consumed
+        if journal is not None and not hasattr(journal, "append"):
+            from repro.serving.durability import Journal
+            journal = Journal(journal)
+        self._journal = journal
+        self._probe_paths: Optional[List[str]] = None
+        if integrity_every is not None:
+            self._init_integrity()
         # admission buckets are capped by the cache length: for sliding-
         # window archs the ring slice in prefill is only per-row-exact while
         # padded length <= window, so longer prompts take the solo path
@@ -592,6 +638,135 @@ class ServingEngine:
             self._dattn_kw = _attn_kwargs(self.draft_cfg, self.attn_mode,
                                           self.kv_bits)
         self._build_jits()
+
+    # --- durability: snapshots, write-ahead journal, weight integrity -------
+
+    def _log_event(self, event: Dict[str, Any]):
+        """Append one event to the write-ahead journal (no-op without
+        one). Every event carries the current tick."""
+        if self._journal is not None:
+            self._journal.append(dict(event, tick=self.decode_calls))
+            self.journal_events += 1
+
+    def snapshot(self, snapshot_dir: Optional[str] = None) -> str:
+        """Persist complete engine state (device trees + host bookkeeping)
+        as an atomic restore point; see ``serving.durability``."""
+        from repro.serving import durability
+        d = snapshot_dir or self.snapshot_dir
+        if d is None:
+            raise ValueError("no snapshot_dir: pass one here or at "
+                             "construction")
+        return durability.snapshot_engine(self, d)
+
+    def restore(self, snapshot_dir: Optional[str] = None,
+                step: Optional[int] = None) -> Dict[str, Any]:
+        """Load a snapshot into this (freshly constructed) engine and
+        resume exactly where it was taken — token-identical at T=0."""
+        from repro.serving import durability
+        d = snapshot_dir or self.snapshot_dir
+        if d is None:
+            raise ValueError("no snapshot_dir: pass one here or at "
+                             "construction")
+        return durability.restore_engine(self, d, step)
+
+    def recover(self, snapshot_dir: Optional[str] = None,
+                journal: Optional[str] = None) -> Dict[str, Any]:
+        """Crash recovery: latest snapshot (if any) + journal-tail replay.
+        Defaults to the construction-time snapshot dir and journal path."""
+        from repro.serving import durability
+        jpath = journal or (self._journal.path if self._journal is not None
+                            else None)
+        return durability.recover(
+            self, snapshot_dir=snapshot_dir or self.snapshot_dir,
+            journal=jpath)
+
+    def _init_integrity(self):
+        """Build the weight-store integrity machinery: the protected-path
+        list (packed ``qp``/``q``/``delta`` containers for serve forms,
+        every leaf for float masters), a jitted canary-fingerprint probe,
+        the golden fingerprint vector, and an independent host-side golden
+        copy + CRC manifest to heal from. ``golden_dir`` additionally
+        persists the golden store to disk (checkpoint.integrity.save_golden)
+        so heals survive the process too."""
+        from repro.checkpoint import integrity
+        from repro.core.treeutil import tree_get
+        paths = integrity.protected_paths(self.params)
+        self._probe_paths, probe = integrity.make_probe(self.params, paths)
+        self._probe_fn = jax.jit(probe)
+        self._golden = {p: np.array(np.asarray(tree_get(self.params, p)))
+                        for p in paths}
+        self._manifest = integrity.build_manifest(self.params, paths)
+        self._golden_fp = np.asarray(self._probe_fn(self.params))
+        if self.golden_dir is not None:
+            integrity.save_golden(self.golden_dir, self.params, paths)
+        self._next_probe = 0
+
+    def _flip_bit(self, path: str, bit: int):
+        """Fault injection: XOR one bit of the params leaf at ``path`` —
+        a soft error in the resident weight store (``bit`` wraps modulo
+        the leaf's bit count). Host round-trip, so the device copy is
+        replaced wholesale; the golden copy is independent."""
+        from repro.core.treeutil import tree_get, tree_set
+        a = np.array(np.asarray(tree_get(self.params, path)))
+        raw = a.view(np.uint8).reshape(-1)
+        b = int(bit) % (raw.size * 8)
+        raw[b // 8] ^= np.uint8(1 << (b % 8))
+        self.params = tree_set(self.params, path, jnp.asarray(a))
+
+    def _integrity_probe(self):
+        """One canary pass over the protected weight leaves: fingerprint
+        vector vs golden. A mismatch names the corrupt container(s) and
+        triggers the self-heal."""
+        self.integrity_probes += 1
+        fps = np.asarray(self._probe_fn(self.params))
+        bad = [self._probe_paths[i]
+               for i in np.nonzero(fps != self._golden_fp)[0]]
+        if bad:
+            self._heal(bad)
+
+    def _heal(self, bad_paths: List[str]):
+        """Self-heal detected weight corruption: reload each corrupt
+        container from the golden copy, confirm the probe matches golden
+        again, then REWIND every request whose tokens could have been
+        computed against the corrupt store — the suspect window is
+        everything since the last clean probe, so resident unfinished
+        requests and ok-finished-but-undrained requests are rolled back to
+        their prompt and requeued through the normal bucketed admission
+        path (same machinery as preemption; at T=0 the recomputed stream
+        is the clean stream). Requests already DRAINED between the clean
+        probe and detection are the caller-visible at-risk window: probe
+        at least as often as you drain to close it."""
+        from repro.core.treeutil import tree_set
+        self._sync()
+        for p in bad_paths:
+            self.params = tree_set(self.params, p,
+                                   jnp.asarray(self._golden[p]))
+            self.heal_count += 1
+            self.fallback_events.append((self.decode_calls, f"heal:{p}"))
+        fps = np.asarray(self._probe_fn(self.params))
+        if not np.array_equal(fps, self._golden_fp):
+            raise RuntimeError(
+                f"integrity heal failed: {bad_paths} still mismatch the "
+                f"golden fingerprints after reload — golden copy corrupt?")
+        self._log_event({"e": "heal", "paths": list(bad_paths)})
+        victims = [s for s in range(self.slots)
+                   if (r := self._slot_req[s]) is not None and not r.done]
+        resurrect = [r for r in self._finished if r.status == "ok"]
+        self._finished = [r for r in self._finished if r.status != "ok"]
+        requeue = [self._slot_req[s] for s in victims] + resurrect
+        for s in victims:
+            self._release_slot(s)
+        for r in sorted(requeue, key=lambda r: r.uid):
+            r.out.clear()
+            r.done = False
+            r.status = "ok"
+            r.ticks = 0
+            r.accept_hist = {}
+            r.finish_time = 0.0
+            self.queue.append(r)
+        if victims:
+            self._deactivate(victims)
+            self._free_rows(victims)
 
     @property
     def spec_accept_rate(self) -> float:
@@ -830,8 +1005,12 @@ class ServingEngine:
         if self.queue_limit is not None and len(self.queue) >= self.queue_limit:
             self.shed_count += 1
             if self.shed_policy == "reject":
+                self._log_event({"e": "shed", "uid": None,
+                                 "reason": "queue_full"})
                 return SubmitOutcome(0, accepted=False, reason="queue_full")
             victim = self.queue.pop(0)               # drop_oldest
+            self._log_event({"e": "shed", "uid": victim.uid,
+                             "reason": "queue_full"})
             self._finish(victim, "shed")
             shed = (victim.uid,)
         self._uid += 1
@@ -840,6 +1019,10 @@ class ServingEngine:
         req = Request(self._uid, list(prompt), max_new,
                       deadline_at=(self.decode_calls + dl) if dl else None,
                       submit_time=time.perf_counter())
+        # write-ahead: the acceptance is durable before the queue sees it,
+        # so a crash after this line can always replay the request
+        self._log_event({"e": "submit", "uid": req.uid, "prompt": req.prompt,
+                         "max_new": max_new, "deadline_at": req.deadline_at})
         self.queue.append(req)
         self.queue_peak = max(self.queue_peak, len(self.queue))
         return SubmitOutcome(self._uid, accepted=True, shed=shed)
@@ -921,6 +1104,8 @@ class ServingEngine:
         req.status = status
         req.done = True
         req.finish_time = time.perf_counter()
+        self._log_event({"e": "finish", "uid": req.uid, "status": status,
+                         "n_out": len(req.out)})
         self._finished.append(req)
 
     def _pad_slots(self, slot_list: List[int]) -> jnp.ndarray:
@@ -1036,6 +1221,11 @@ class ServingEngine:
             "preempt_count": self.preempt_count,
             "poisoned_count": self.poisoned_count,
             "fallback_events": list(self.fallback_events),
+            "snapshots_written": self.snapshots_written,
+            "journal_events": self.journal_events,
+            "replayed_events": self.replayed_events,
+            "integrity_probes": self.integrity_probes,
+            "heal_count": self.heal_count,
         }
 
     def _admit_batch(self, slot_ids: List[int], reqs: List[Request],
@@ -1099,6 +1289,8 @@ class ServingEngine:
         iff a request never became active (max_new == 1 / instant EOS) —
         and release slots whose lifetime is already over (drain finishes
         them)."""
+        self._log_event({"e": "admit", "uids": [r.uid for r in reqs],
+                         "slots": list(slot_ids)})
         mask_np = np.zeros((self.slots,), bool)
         for s, r in zip(slot_ids, reqs):
             self._slot_req[s] = r
@@ -1120,7 +1312,31 @@ class ServingEngine:
         failure propagates.
 
         Asynchronous: emitted tokens stay on device until ``drain()``.
+
+        Durability hooks ride the tick boundary: an injected
+        ``crash_at_tick`` raises :class:`~repro.serving.resilience.
+        InjectedCrash` FIRST (before anything else — a killed process does
+        nothing else, and the degradation ladder never sees it), injected
+        ``flip_bits`` corrupt the resident weight store, the integrity
+        probe then gets its chance to detect + heal, and a completed tick
+        lands a periodic snapshot (``snapshot_every``).
         """
+        fp = self._fault_plan
+        if (fp is not None and fp.crashes_at(self.decode_calls)
+                and self.decode_calls not in self._crashed_ticks):
+            self._crashed_ticks.add(self.decode_calls)
+            raise resilience.InjectedCrash(
+                f"injected process kill at decode tick {self.decode_calls}")
+        if fp is not None and self.decode_calls not in self._flipped_ticks:
+            flips = fp.flips_at(self.decode_calls)
+            if flips:
+                self._flipped_ticks.add(self.decode_calls)
+                for path, bit in flips:
+                    self._flip_bit(path, bit)
+        if (self._probe_paths is not None
+                and self.decode_calls >= self._next_probe):
+            self._next_probe = self.decode_calls + self.integrity_every
+            self._integrity_probe()
         self._expire_deadlines()
         self._spin_up()
         if not self._occupied():
@@ -1137,6 +1353,10 @@ class ServingEngine:
                 self._ticks_left[s] -= 1
                 if self._ticks_left[s] <= 0:
                     self._release_slot(s)        # budget exhausted this tick
+        if (self.snapshot_dir is not None and self.snapshot_every is not None
+                and self.decode_calls % self.snapshot_every == 0
+                and self.decode_calls != self._last_snapshot_tick):
+            self.snapshot()
 
     def _call_tick(self, poison, k):
         """One jitted tick on the CURRENT graph (spec or plain), with the
@@ -1209,6 +1429,7 @@ class ServingEngine:
                                 for toks, counts, done, _, acc, _, bad
                                 in self._pending])
         quarantined: List[int] = []
+        committed: Dict[int, int] = {}        # uid -> tokens attributed now
         for (toks, counts, done, acc, bad), (_, _, _, owners, _, kind, _) \
                 in zip(moved, self._pending):
             badv = None if isinstance(bad, tuple) else np.asarray(bad)
@@ -1219,6 +1440,7 @@ class ServingEngine:
                 if req is not None:
                     n = int(counts[s])
                     req.out.extend(int(x) for x in toks[s, :n])
+                    committed[req.uid] = committed.get(req.uid, 0) + n
                     if kind == "tick":
                         req.ticks += 1
                         req.accept_hist[n] = req.accept_hist.get(n, 0) + 1
@@ -1244,6 +1466,10 @@ class ServingEngine:
                             self._release_slot(s)
                             quarantined.append(s)
         self._pending.clear()
+        if self._journal is not None:
+            for uid in sorted(committed):
+                self._log_event({"e": "commit", "uid": uid,
+                                 "n": committed[uid]})
         if quarantined:
             # the tick already deactivated poisoned rows on-device; zeroing
             # them keeps contaminated state out of the slot's next tenant

@@ -39,7 +39,8 @@ import dataclasses
 from typing import Dict, FrozenSet, Optional, Tuple
 
 __all__ = ["SHED_POLICIES", "STATUS", "SubmitOutcome", "SubmitRejected",
-           "InjectedFault", "WatchdogExpired", "FaultPlan", "degrade_step"]
+           "InjectedFault", "InjectedCrash", "WatchdogExpired", "FaultPlan",
+           "degrade_step"]
 
 SHED_POLICIES = ("reject", "drop_oldest")
 
@@ -103,6 +104,15 @@ class InjectedFault(RuntimeError):
     ones, while the engine's recovery path treats both identically."""
 
 
+class InjectedCrash(RuntimeError):
+    """The simulated process kill :class:`FaultPlan.crash_at_tick` raises
+    from ``step()`` — deliberately NOT recoverable by the degradation
+    ladder (a dead process cannot retry anything). Recovery is the
+    durability path: a NEW engine restored from the latest on-disk
+    snapshot plus the write-ahead journal tail
+    (:func:`repro.serving.durability.recover`)."""
+
+
 class WatchdogExpired(RuntimeError):
     """``run_all(max_ticks=)`` exceeded its tick budget with work still
     queued or resident — the engine is wedged (or the budget is simply too
@@ -136,6 +146,20 @@ class FaultPlan:
     ``delay_admission`` {tick, ...}: skip the admission round at that
                      tick — exercises queue aging under deferred
                      admission (deadlines can expire while queued).
+    ``crash_at_tick`` Optional[int]: raise :class:`InjectedCrash` from
+                     ``step()`` at that tick — a simulated process kill
+                     that BYPASSES the degradation ladder (nothing in the
+                     dying process recovers; the durability layer's
+                     snapshot + journal must). Everything on device and in
+                     host bookkeeping at that instant is lost, exactly as
+                     a real SIGKILL would lose it.
+    ``flip_bits``    {(tick, path, bit), ...}: flip one BIT of the params
+                     leaf at tree path ``path`` (e.g.
+                     ``"layers/mlp/w_in/qp"``) at the start of that tick —
+                     a soft error in the resident packed weight store,
+                     the fault class the paper's weights-live-on-chip
+                     thesis makes permanent (no DRAM reload ever rights
+                     it). Exercises the integrity probe + self-heal path.
 
     Instances are immutable; one-shot consumption state (``fail_ticks``
     firing once each) lives in the engine, not here, so a plan can be
@@ -145,14 +169,23 @@ class FaultPlan:
     nan_logits: FrozenSet[Tuple[int, int]] = frozenset()
     fail_ticks: FrozenSet[int] = frozenset()
     delay_admission: FrozenSet[int] = frozenset()
+    crash_at_tick: Optional[int] = None
+    flip_bits: FrozenSet[Tuple[int, str, int]] = frozenset()
 
-    def __init__(self, nan_logits=(), fail_ticks=(), delay_admission=()):
+    def __init__(self, nan_logits=(), fail_ticks=(), delay_admission=(),
+                 crash_at_tick=None, flip_bits=()):
         object.__setattr__(self, "nan_logits",
                            _as_tick_slot_pairs(nan_logits))
         object.__setattr__(self, "fail_ticks",
                            frozenset(int(t) for t in fail_ticks))
         object.__setattr__(self, "delay_admission",
                            frozenset(int(t) for t in delay_admission))
+        object.__setattr__(self, "crash_at_tick",
+                           None if crash_at_tick is None
+                           else int(crash_at_tick))
+        object.__setattr__(self, "flip_bits",
+                           frozenset((int(t), str(p), int(b))
+                                     for t, p, b in flip_bits))
 
     # --- queries the engine makes, all O(1)-ish on host ints -----------------
 
@@ -165,10 +198,18 @@ class FaultPlan:
     def delays_admission_at(self, tick: int) -> bool:
         return tick in self.delay_admission
 
+    def crashes_at(self, tick: int) -> bool:
+        return self.crash_at_tick is not None and tick == self.crash_at_tick
+
+    def flips_at(self, tick: int) -> Tuple[Tuple[str, int], ...]:
+        return tuple(sorted((p, b) for t, p, b in self.flip_bits
+                            if t == tick))
+
     @property
     def empty(self) -> bool:
         return not (self.nan_logits or self.fail_ticks
-                    or self.delay_admission)
+                    or self.delay_admission or self.flip_bits
+                    or self.crash_at_tick is not None)
 
     @classmethod
     def random(cls, seed: int, *, ticks: int, slots: int,

@@ -1,0 +1,273 @@
+"""Weight-store integrity + serving-state round-trips: CRC golden
+manifests detect host-side corruption; the in-graph canary fingerprint
+probe detects (and localizes) ANY single-bit flip in a protected leaf;
+the engine's probe + self-heal path survives injected soft errors in the
+packed container with outputs matching a clean run; and the durability
+layer's array plumbing — ``cache_to_host``/``cache_from_host`` and the
+checkpoint npz round-trip — is exact and dtype-preserving across all four
+families x weight forms, including int8-KV scale trees, SWA ring state,
+and bfloat16 leaves (which plain ``np.savez`` would silently degrade to
+raw void bytes).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import integrity
+from repro.configs import get_config, reduced
+from repro.core import quant_dense
+from repro.core.precision import FLOAT, W3A8
+from repro.core.treeutil import flatten_with_path, tree_get, tree_set
+from repro.models import api as model_api
+from repro.models import get_model
+from repro.serving.engine import ServingEngine
+from repro.serving.resilience import FaultPlan
+
+W3 = dataclasses.replace(W3A8, act_bits=None)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compile_caches():
+    yield
+    jax.clear_caches()
+
+
+ARCH_FOR = {"dense": "qwen2-1.5b", "ssm": "mamba2-2.7b",
+            "moe": "mixtral-8x22b", "hybrid": "zamba2-1.2b"}
+
+
+def _setup(family="dense", form="qp"):
+    layers = 4 if family == "hybrid" else 2
+    cfg = reduced(get_config(ARCH_FOR[family]), layers=layers, d_model=32,
+                  vocab=64)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    if form == "w":
+        return cfg, params, FLOAT
+    export = {"q": quant_dense.export_levels,
+              "qp": quant_dense.export_container}[form]
+    return cfg, export(params, W3), W3
+
+
+def _flip_host(tree, path, bit):
+    a = np.array(np.asarray(tree_get(tree, path)))
+    raw = a.view(np.uint8).reshape(-1)
+    b = bit % (raw.size * 8)
+    raw[b // 8] ^= np.uint8(1 << (b % 8))
+    return tree_set(tree, path, jnp.asarray(a))
+
+
+# --- golden manifest ----------------------------------------------------------
+
+@pytest.mark.parametrize("form", ["w", "q", "qp"])
+def test_manifest_localizes_bit_flip(form):
+    """verify_manifest names exactly the corrupted container — serve
+    forms protect the packed qp/q/delta leaves, float masters every
+    array leaf."""
+    _, params, _ = _setup("dense", form)
+    paths = integrity.protected_paths(params)
+    assert paths
+    if form == "qp":
+        # the embedding stays in level form even in the packed export
+        assert all(p.rsplit("/", 1)[-1] in ("qp", "q", "delta")
+                   for p in paths)
+    if form == "q":
+        assert all(p.rsplit("/", 1)[-1] in ("q", "delta") for p in paths)
+    manifest = integrity.build_manifest(params, paths)
+    assert integrity.verify_manifest(params, manifest) == []
+    victim = paths[len(paths) // 2]
+    bad = _flip_host(params, victim, 12345)
+    assert integrity.verify_manifest(bad, manifest) == [victim]
+
+
+def test_manifest_save_load_roundtrip(tmp_path):
+    _, params, _ = _setup("dense", "qp")
+    manifest = integrity.build_manifest(params)
+    p = str(tmp_path / "m" / "manifest.json")
+    integrity.save_manifest(p, manifest)
+    assert integrity.load_manifest(p) == manifest
+
+
+# --- in-graph canary probe ----------------------------------------------------
+
+@pytest.mark.parametrize("form", ["w", "qp"])
+def test_probe_detects_any_single_bit(form):
+    """The wrapping-uint32 odd-multiplier fingerprint moves for EVERY
+    single-bit flip — across leaves, word positions, and bit positions
+    (incl. the high bit, which a float dot product would round away) —
+    and returns to golden when the flip is undone."""
+    _, params, _ = _setup("dense", form)
+    paths, probe = integrity.make_probe(params)
+    probe = jax.jit(probe)
+    golden = np.asarray(probe(params))
+    rng = np.random.default_rng(0)
+    for trial in range(12):
+        i = int(rng.integers(len(paths)))
+        bit = int(rng.integers(1 << 20))
+        bad = _flip_host(params, paths[i], bit)
+        fps = np.asarray(probe(bad))
+        diff = np.nonzero(fps != golden)[0]
+        assert list(diff) == [i], \
+            f"flip of bit {bit} in {paths[i]} not localized (diff={diff})"
+        # flipping the same bit back restores the fingerprint exactly
+        assert np.array_equal(np.asarray(probe(_flip_host(bad, paths[i],
+                                                          bit))), golden)
+
+
+def test_probe_matches_manifest_verdict():
+    """The cheap in-graph probe and the exact host CRC oracle agree on
+    clean and corrupted stores."""
+    _, params, _ = _setup("dense", "qp")
+    paths, probe = integrity.make_probe(params)
+    manifest = integrity.build_manifest(params, paths)
+    golden = integrity.fingerprints(params, paths)
+    bad = _flip_host(params, paths[0], 7)
+    assert integrity.verify_manifest(bad, manifest) == [paths[0]]
+    fps = integrity.fingerprints(bad, paths)
+    assert [paths[i] for i in np.nonzero(fps != golden)[0]] == [paths[0]]
+
+
+def test_golden_store_roundtrip(tmp_path):
+    """save_golden/load_golden: exact bytes and dtypes back, manifest
+    attached — what the engine heals from."""
+    _, params, _ = _setup("dense", "qp")
+    gdir = str(tmp_path / "golden")
+    manifest = integrity.save_golden(gdir, params)
+    flat, manifest2 = integrity.load_golden(gdir)
+    assert manifest2 == manifest
+    for p in integrity.protected_paths(params):
+        want = np.asarray(tree_get(params, p))
+        assert flat[p].dtype == want.dtype
+        assert np.array_equal(flat[p], want)
+
+
+# --- engine probe + self-heal -------------------------------------------------
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+def test_engine_detects_and_heals_bit_flip(tmp_path, family):
+    """A soft error injected into a packed container mid-run is detected
+    by the periodic canary probe, healed from the golden copy, the
+    affected in-flight requests are rewound and requeued, and the run
+    completes with output identical to a clean run."""
+    cfg, params, policy = _setup(family, "qp")
+    prompts = [[1, 2, 3], [7, 8, 9, 10], [20, 21], [30, 31, 32, 33, 34]]
+    maxnew = [7, 5, 8, 6]
+
+    def run(**kw):
+        eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=64,
+                            dtype=jnp.float32, **kw)
+        for p, m in zip(prompts, maxnew):
+            eng.submit(list(p), max_new=m)
+        done = eng.run_all(max_ticks=600)
+        return eng, {r.uid: (tuple(r.prompt), tuple(r.out)) for r in done}
+
+    _, clean = run()
+    victim = [p for p in flatten_with_path(params) if p.endswith("/qp")][0]
+    eng, healed = run(integrity_every=1, golden_dir=str(tmp_path / "g"),
+                      fault_plan=FaultPlan(flip_bits=[(5, victim, 31337)]))
+    assert eng.heal_count == 1
+    assert any(lbl == f"heal:{victim}" for _, lbl in eng.fallback_events)
+    assert eng.integrity_probes > 1
+    # post-heal the store matches its manifest again (exact host oracle)
+    assert integrity.verify_manifest(eng.params, eng._manifest) == []
+    assert healed == clean
+    # the golden store was persisted for out-of-process heals too
+    flat, _ = integrity.load_golden(str(tmp_path / "g"))
+    assert victim in flat
+
+
+def test_heal_rewinds_in_flight_requests():
+    """Corruption detected while requests are resident: every unfinished
+    request is rolled back to its prompt (suspect tokens discarded) and
+    requeued — statuses stay 'ok' and nothing is lost."""
+    cfg, params, policy = _setup("dense", "qp")
+    victim = [p for p in flatten_with_path(params) if p.endswith("/qp")][0]
+    eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=64,
+                        dtype=jnp.float32, integrity_every=1,
+                        fault_plan=FaultPlan(flip_bits=[(3, victim, 9)]))
+    uids = [int(eng.submit([i + 1, i + 2, i + 3], max_new=6))
+            for i in range(4)]
+    done = eng.run_all(max_ticks=600)
+    assert sorted(r.uid for r in done) == uids
+    assert all(r.status == "ok" for r in done)
+    assert all(len(r.out) == 6 for r in done)
+    assert eng.heal_count == 1
+
+
+def test_integrity_probe_off_by_default():
+    cfg, params, policy = _setup("dense", "qp")
+    eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=32,
+                        dtype=jnp.float32)
+    eng.submit([1, 2, 3], max_new=3)
+    eng.run_all(max_ticks=100)
+    assert eng.integrity_probes == 0 and eng._probe_paths is None
+
+
+# --- serving-state array round-trips ------------------------------------------
+
+CACHE_CASES = [("dense", "w", None), ("dense", "q", None),
+               ("dense", "qp", 8), ("ssm", "w", None), ("ssm", "qp", None),
+               ("moe", "qp", None), ("hybrid", "qp", None),
+               ("hybrid", "qp", 8)]
+
+
+@pytest.mark.parametrize("family,form,kv_bits", CACHE_CASES)
+def test_cache_roundtrip_exact(tmp_path, family, form, kv_bits):
+    """cache_to_host -> checkpoint.save/restore -> cache_from_host is the
+    identity on a LIVE mid-run cache: exact array equality and preserved
+    dtypes for every leaf — KV (incl. int8 levels + scale trees), SSM
+    state, hybrid groups, and the SWA ring (moe = mixtral, sliding
+    window)."""
+    from repro import checkpoint
+    cfg, params, policy = _setup(family, form)
+    eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=48,
+                        dtype=jnp.float32, kv_bits=kv_bits)
+    eng.submit([1, 2, 3, 4, 5], max_new=6)
+    eng.submit([9, 8, 7], max_new=5)
+    for _ in range(3):
+        eng.step()
+    eng._sync()
+
+    host = model_api.cache_to_host(cfg, eng.cache)
+    checkpoint.save(str(tmp_path / "c"), 0, host)
+    loaded, _ = checkpoint.restore(str(tmp_path / "c"), 0)
+    back = model_api.cache_from_host(cfg, loaded, like=eng.cache)
+
+    want = flatten_with_path(jax.device_get(eng.cache))
+    got = flatten_with_path(jax.device_get(back))
+    assert set(got) == set(want)
+    for k in want:
+        assert np.asarray(got[k]).dtype == np.asarray(want[k]).dtype, k
+        assert np.array_equal(np.asarray(got[k]), np.asarray(want[k])), k
+
+
+def test_cache_from_host_validates_against_like():
+    """Structure/shape/dtype mismatches against the live cache are
+    refused loudly, naming the offending leaf."""
+    cfg, params, policy = _setup("dense", "qp")
+    eng = ServingEngine(params, cfg, policy=policy, slots=2, max_len=32,
+                        dtype=jnp.float32)
+    host = model_api.cache_to_host(cfg, eng.cache)
+    bad = jax.tree_util.tree_map(lambda x: x, host)
+    bad["k"] = bad["k"][..., :-1]                     # wrong shape
+    with pytest.raises(ValueError):
+        model_api.cache_from_host(cfg, bad, like=eng.cache)
+
+
+def test_checkpoint_preserves_bf16(tmp_path):
+    """The checkpoint npz path records true dtypes: bfloat16 leaves come
+    back as bfloat16 with identical bits (np.savez alone would return raw
+    '|V2' void bytes)."""
+    from repro import checkpoint
+    tree = {"a": jnp.arange(12, dtype=jnp.bfloat16) / 7,
+            "n": {"b": jnp.ones((3, 2), jnp.float32),
+                  "c": jnp.arange(5, dtype=jnp.int8)}}
+    checkpoint.save(str(tmp_path / "c"), 0, tree)
+    back, meta = checkpoint.restore(str(tmp_path / "c"), 0)
+    assert "_dtypes" not in meta                      # internal, popped
+    for k, v in flatten_with_path(tree).items():
+        got = flatten_with_path(back)[k]
+        assert got.dtype == np.asarray(v).dtype, k
+        assert np.array_equal(got, np.asarray(v)), k
